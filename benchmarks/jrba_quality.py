@@ -1,0 +1,58 @@
+"""JRBA solver quality + overhead benchmark (supports the paper's
+waiting-time discussion: scheduling cost is the dominant overhead)."""
+from __future__ import annotations
+
+import itertools
+import time
+
+import numpy as np
+
+from repro.core import Flow, brute_force_span, build_program, jrba, random_edge_network
+
+from .common import csv_line
+
+
+def jrba_quality(quick: bool = False) -> None:
+    rng_seeds = range(4 if quick else 10)
+    gaps, times = [], []
+    for seed in rng_seeds:
+        rng = np.random.RandomState(seed)
+        net = random_edge_network(10, mean_bandwidth=4.0, rng=rng)
+        flows = []
+        for i in range(5):
+            u, v = rng.choice(10, size=2, replace=False)
+            flows.append(Flow(int(u), int(v), float(rng.uniform(0.5, 4.0)), job_id=i))
+        prog = build_program(net, flows, k=3)
+        best = brute_force_span(prog)
+        t0 = time.perf_counter()
+        res = jrba(net, flows, k=3)
+        times.append(time.perf_counter() - t0)
+        gaps.append(res.span / max(best, 1e-12) - 1.0)
+    print(
+        csv_line(
+            "jrba/rounding_gap",
+            float(np.mean(times) * 1e6),
+            f"mean_gap={np.mean(gaps)*100:.2f}%;max_gap={max(gaps)*100:.2f}%;"
+            f"n={len(gaps)} (vs exhaustive path enumeration)",
+        )
+    )
+
+
+def jrba_scaling(quick: bool = False) -> None:
+    """Solver wall-clock vs flow count (the paper's Fig. 11(c) overhead
+    story: stays sub-second through realistic sizes)."""
+    sizes = (8, 32) if quick else (8, 16, 32, 64, 128)
+    rng = np.random.RandomState(0)
+    net = random_edge_network(40, mean_bandwidth=2.0, rng=rng)
+    for nf in sizes:
+        flows = []
+        for i in range(nf):
+            u, v = rng.choice(40, size=2, replace=False)
+            flows.append(Flow(int(u), int(v), float(rng.uniform(0.5, 4.0)), job_id=i))
+        jrba(net, flows, k=3, n_iters=150)  # warm the jit cache
+        t0 = time.perf_counter()
+        reps = 3
+        for _ in range(reps):
+            jrba(net, flows, k=3, n_iters=150)
+        dt = (time.perf_counter() - t0) / reps
+        print(csv_line(f"jrba/scale_nf{nf}", dt * 1e6, f"wall_s={dt:.4f}"))

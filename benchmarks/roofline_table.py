@@ -1,0 +1,93 @@
+"""Roofline table from the dry-run artifacts (launch/dryrun.py output).
+
+Per (arch x cell x mesh): the three roofline terms
+    compute    = HLO_FLOPs_per_chip / 197e12  (bf16 peak, v5e)
+    memory     = HLO_bytes_per_chip / 819e9   (HBM bandwidth)
+    collective = collective_bytes_per_chip / 50e9 (per-link ICI)
+plus MODEL_FLOPS = 6 N D (N_active for MoE) and the useful-compute ratio.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import get_config
+from repro.configs.shapes import CELLS
+
+from .common import csv_line
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def _model_flops(arch: str, cell_name: str) -> float:
+    """6*N*D per chip (train includes backward; prefill/decode are 2*N*D)."""
+    cfg = get_config(arch)
+    cell = CELLS[cell_name]
+    n = cfg.active_param_count()
+    chips = 256  # roofline table is single-pod by assignment
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens / chips
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens / chips
+    tokens = cell.global_batch  # one token per sequence
+    return 2.0 * n * tokens / chips
+
+
+def load_records(results_dir: str, mesh: str) -> list[dict]:
+    path = os.path.join(results_dir, f"dryrun_{mesh}.jsonl")
+    if not os.path.exists(path):
+        return []
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["cell"])] = r  # latest wins
+    return list(recs.values())
+
+
+def roofline_table(results_dir: str = "benchmarks/results", quick: bool = False) -> list[dict]:
+    rows = []
+    recs = load_records(results_dir, "single")
+    if not recs:
+        print(csv_line("roofline/missing", 0.0, "run launch/dryrun.py first"))
+        return rows
+    for r in sorted(recs, key=lambda x: (x["arch"], x["cell"])):
+        name = f"roofline/{r['arch']}/{r['cell']}"
+        if not r.get("ok"):
+            print(csv_line(name, 0.0, f"FAILED:{r.get('error', '?')}"))
+            continue
+        c = r.get("corrected") or r
+        flops = c["flops"]
+        byts = c["bytes_accessed"]
+        coll = c["collectives"]["total"]
+        t_c = flops / PEAK_FLOPS
+        t_m = byts / HBM_BW
+        t_n = coll / ICI_BW
+        dominant = max(("compute", t_c), ("memory", t_m), ("collective", t_n), key=lambda kv: kv[1])
+        mf = _model_flops(r["arch"], r["cell"])
+        row = {
+            "arch": r["arch"],
+            "cell": r["cell"],
+            "compute_s": t_c,
+            "memory_s": t_m,
+            "collective_s": t_n,
+            "dominant": dominant[0],
+            "model_flops": mf,
+            "useful_ratio": mf / flops if flops else 0.0,
+            "roofline_frac": t_c / max(t_c, t_m, t_n),
+        }
+        rows.append(row)
+        print(
+            csv_line(
+                name,
+                dominant[1] * 1e6,
+                f"compute_s={t_c:.4f};memory_s={t_m:.4f};collective_s={t_n:.4f};"
+                f"dominant={dominant[0]};useful_ratio={row['useful_ratio']:.3f};"
+                f"roofline_frac={row['roofline_frac']:.3f}",
+            )
+        )
+    return rows

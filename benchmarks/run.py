@@ -1,0 +1,52 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus derived claim checks).
+``--quick`` runs reduced sweeps for CI-style smoke validation.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig2,jrba,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="", help="comma list: fig2,nodes,jobs,bw,jrba,wf,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(tag: str) -> bool:
+        return only is None or tag in only
+
+    from . import jrba_quality, paper_figures, roofline_table
+
+    print("name,us_per_call,derived")
+    nodes_res = jobs_res = bw_res = {}
+    if want("fig2"):
+        paper_figures.fig2_motivating(args.quick)
+    if want("nodes"):
+        nodes_res = paper_figures.fig11_nodes(args.quick, bandwidth=1.0)
+        if not args.quick:
+            paper_figures.fig11_nodes(args.quick, bandwidth=10.0)
+    if want("jobs"):
+        jobs_res = paper_figures.fig11_jobs(args.quick)
+    if want("bw"):
+        bw_res = paper_figures.fig11_bandwidth(args.quick)
+    if want("nodes") or want("jobs"):
+        paper_figures.claims_check(nodes_res, jobs_res, bw_res)
+    if want("wf"):
+        paper_figures.waterfill_gain(args.quick)
+    if want("jrba"):
+        jrba_quality.jrba_quality(args.quick)
+        jrba_quality.jrba_scaling(args.quick)
+    if want("roofline"):
+        roofline_table.roofline_table(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

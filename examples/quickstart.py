@@ -1,0 +1,58 @@
+"""Quickstart: schedule a streaming job with ENTS and compare policies.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import (
+    OnlineScheduler,
+    fig2_instance,
+    allocate_greedy,
+    allocate_whole_job_lr,
+    equal_share_bandwidth,
+    jrba,
+    job_span,
+    poisson_arrivals,
+    random_edge_network,
+    throughput,
+)
+
+
+def single_job_demo() -> None:
+    print("=== Fig. 2 motivating example: one streaming job, four policies ===")
+    net, job = fig2_instance()
+
+    alloc, flows = allocate_whole_job_lr(net, job, commit=False)
+    _, bands = equal_share_bandwidth(net, flows)
+    print(f"LeastRequested (no partition): throughput {throughput(net, alloc, flows, bands):.2f}")
+
+    alloc, flows = allocate_greedy(net, job, commit=False)
+    _, bands = equal_share_bandwidth(net, flows)
+    print(f"Task partition + equal share:  throughput {throughput(net, alloc, flows, bands):.2f}")
+
+    res = jrba(net, flows, k=4)
+    tp = throughput(net, alloc, res.flows, res.bandwidth)
+    print(f"ENTS (Algo 1 + JRBA):          throughput {tp:.2f}")
+    for f, route, b in zip(res.flows, res.routes, res.bandwidth):
+        print(f"   flow {f.edge} vol={f.volume:g}: route {route}, bandwidth {b:.2f}")
+
+
+def online_demo() -> None:
+    print("\n=== Online scheduling: 12 video-analytics jobs on a 16-node edge mesh ===")
+    for policy in ("LR", "TP", "OTFS", "OTFA", "OTFA+WF"):
+        net = random_edge_network(16, mean_bandwidth=1.0, rng=np.random.RandomState(4))
+        arrivals = poisson_arrivals(12, 16, np.random.RandomState(5), total_units=20.0)
+        res = OnlineScheduler(net, policy, jrba_iters=150).run(arrivals)
+        print(
+            f"{policy:8s}: avg throughput {res.avg_throughput:.3f} units/s, "
+            f"avg waiting {res.avg_waiting_time:.3f}s"
+        )
+
+
+if __name__ == "__main__":
+    single_job_demo()
+    online_demo()

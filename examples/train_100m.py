@@ -1,0 +1,68 @@
+"""End-to-end training driver example: a ~100M-parameter dense model trained
+for a few hundred steps on synthetic data, with checkpoint/resume.
+
+  PYTHONPATH=src python examples/train_100m.py [--steps 300] [--preset tiny]
+
+(The 100M preset is real compute — on a 1-core CPU container use
+``--preset tiny --steps 50`` for a quick demonstration; the training loop,
+checkpointing, and data pipeline are identical.)
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import Block, ModelConfig, register
+from repro.launch.train import main as train_main
+
+# ~100M params: 12L d=768 12H d_ff=3072 vocab=32000 (GPT-2-small-ish)
+register(
+    ModelConfig(
+        name="demo-100m",
+        family="dense",
+        d_model=768,
+        vocab=32_000,
+        n_heads=12,
+        n_kv_heads=12,
+        head_dim=64,
+        d_ff=3072,
+        pattern=(Block("gqa", "dense"),),
+        n_pattern_repeats=12,
+    )
+)
+
+register(
+    ModelConfig(
+        name="demo-tiny",
+        family="dense",
+        d_model=128,
+        vocab=2_000,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=32,
+        d_ff=512,
+        pattern=(Block("gqa", "dense"),),
+        n_pattern_repeats=4,
+    )
+)
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--preset", choices=["100m", "tiny"], default="100m")
+    ap.add_argument("--ckpt-dir", default="/tmp/ents_demo_ckpt")
+    args = ap.parse_args()
+    arch = "demo-100m" if args.preset == "100m" else "demo-tiny"
+    batch, seq = (8, 256) if args.preset == "100m" else (8, 128)
+    out = train_main(
+        [
+            "--arch", arch,
+            "--steps", str(args.steps),
+            "--batch", str(batch),
+            "--seq", str(seq),
+            "--ckpt-dir", args.ckpt_dir,
+            "--ckpt-every", "100",
+            "--log-every", "10",
+        ]
+    )
+    print(f"final: loss {out['first_loss']:.3f} -> {out['last_loss']:.3f}")

@@ -1,0 +1,76 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Hillclimb driver: lower one cell under a named variant, print the three
+roofline terms + the top collective contributors by (op, shape).
+
+  PYTHONPATH=src python scripts/hillclimb.py --arch internlm2-1.8b \
+      --cell train_4k --variant baseline
+"""
+import argparse  # noqa: E402
+import collections  # noqa: E402
+import re  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.launch import variants  # noqa: E402
+from repro.launch.dryrun import _scan_corrected, analyze, lower_cell  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+BYTES = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "s8": 1, "u8": 1, "pred": 1}
+OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def collective_breakdown(hlo: str, top: int = 12) -> None:
+    agg = collections.Counter()
+    for line in hlo.splitlines():
+        m = re.search(
+            r"= (\w+)\[([\d,]*)\][^ ]* (all-reduce|all-gather|reduce-scatter|"
+            r"all-to-all|collective-permute)(?:-start)?\(",
+            line,
+        )
+        if not m or "-done(" in line:
+            continue
+        dt, dims, op = m.groups()
+        if dt not in BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        agg[(op, f"{dt}[{dims}]")] += n * BYTES[dt]
+    print("top collective contributors (bytes, op, shape) [loop bodies x1]:")
+    for (op, shape), b in agg.most_common(top):
+        print(f"  {b/1e9:9.3f} GB  {op:19s} {shape}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--variant", default="baseline", choices=sorted(variants.VARIANTS))
+    ap.add_argument("--breakdown", action="store_true")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh()
+    variants.activate(args.variant)
+    lowered, aux = lower_cell(args.arch, args.cell, mesh)
+    compiled = lowered.compile()
+    info = analyze(lowered, compiled)
+    corr = _scan_corrected(args.arch, args.cell, mesh).get("corrected", info)
+    print(f"=== {args.arch} x {args.cell} [{args.variant}] ===")
+    print(f"static state/chip: {aux['static_state_bytes_per_device']/1e9:.2f} GB")
+    t_c = corr["flops"] / 197e12
+    t_m = corr["bytes_accessed"] / 819e9
+    t_n = corr["collectives"]["total"] / 50e9
+    print(f"compute {t_c:.4f}s | memory {t_m:.4f}s | collective {t_n:.4f}s "
+          f"| dominant={max([('compute',t_c),('memory',t_m),('collective',t_n)], key=lambda kv: kv[1])[0]}")
+    per_op = {k: corr["collectives"][k] for k in OPS}
+    print("collective bytes by op:", {k: f"{v/1e9:.1f}GB" for k, v in per_op.items() if v})
+    if args.breakdown:
+        collective_breakdown(compiled.as_text())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""ENTS core: the paper's contribution.
+
+Graph models, Algorithm 1 (greedy task allocation), Algorithm 2 (JRBA —
+joint routing + bandwidth allocation via a JAX-native solver of
+P3-RELAX-CVX), Algorithms 3/4 (OTFS/OTFA online scheduling), the LR/BR/TP
+baselines, and the profiler. ``placement`` maps scheduling decisions onto
+TPU pod submeshes (the hardware adaptation described in DESIGN.md §2).
+"""
+from .allocation import (
+    Allocation,
+    allocate_greedy,
+    allocate_whole_job_br,
+    allocate_whole_job_lr,
+    equal_share_bandwidth,
+    flows_from_assignment,
+    job_span,
+    throughput,
+)
+from .graph import Flow, JobGraph, NetworkGraph, Task, random_edge_network, torus_network
+from .jrba import JRBAResult, brute_force_span, build_program, jrba, solve_relaxation, water_fill
+from .online import POLICIES, JobRecord, OnlineScheduler, SimResult
+from .paths import avg_path_bandwidth, dijkstra, k_shortest_paths, path_links
+from .profiler import TPU_V5E, JobProfile, NodeClass, profile_job, profile_on_network
+from .workloads import fig2_instance, fig2_job, poisson_arrivals, video_analytics_job
+
+__all__ = [
+    "Allocation",
+    "Flow",
+    "JobGraph",
+    "JobProfile",
+    "JobRecord",
+    "JRBAResult",
+    "NetworkGraph",
+    "NodeClass",
+    "OnlineScheduler",
+    "POLICIES",
+    "SimResult",
+    "Task",
+    "TPU_V5E",
+    "allocate_greedy",
+    "allocate_whole_job_br",
+    "allocate_whole_job_lr",
+    "avg_path_bandwidth",
+    "brute_force_span",
+    "build_program",
+    "dijkstra",
+    "equal_share_bandwidth",
+    "fig2_instance",
+    "fig2_job",
+    "flows_from_assignment",
+    "job_span",
+    "jrba",
+    "k_shortest_paths",
+    "path_links",
+    "poisson_arrivals",
+    "profile_job",
+    "profile_on_network",
+    "random_edge_network",
+    "solve_relaxation",
+    "throughput",
+    "torus_network",
+    "video_analytics_job",
+    "water_fill",
+]

@@ -1,0 +1,119 @@
+"""K-shortest loopless path enumeration (Yen's algorithm) over the network.
+
+Candidate routing paths ``P_i^k`` for each flow (paper Sec. V-C2) come from
+here. Distances default to hop count with a 1/bandwidth tie-break so that,
+among equally short routes, higher-capacity ones are preferred — matching the
+paper's preference for uncongested paths while keeping the candidate set
+small enough for the JRBA LP tensor.
+"""
+from __future__ import annotations
+
+import heapq
+
+from .graph import NetworkGraph
+
+__all__ = ["dijkstra", "k_shortest_paths", "path_links", "avg_path_bandwidth"]
+
+
+def _edge_cost(net: NetworkGraph, u: int, v: int, eps: float = 1e-3) -> float:
+    # hop-dominant cost; 1/bw break ties toward fat links
+    return 1.0 + eps / max(net.bandwidth[(min(u, v), max(u, v))], 1e-9)
+
+
+def dijkstra(
+    net: NetworkGraph,
+    src: int,
+    dst: int,
+    *,
+    banned_links: set[tuple[int, int]] | None = None,
+    banned_nodes: set[int] | None = None,
+) -> list[int] | None:
+    """Shortest path src->dst as a node list, or None if disconnected."""
+    banned_links = banned_links or set()
+    banned_nodes = banned_nodes or set()
+    if src in banned_nodes or dst in banned_nodes:
+        return None
+    dist = {src: 0.0}
+    prev: dict[int, int] = {}
+    heap = [(0.0, src)]
+    seen: set[int] = set()
+    while heap:
+        d, u = heapq.heappop(heap)
+        if u in seen:
+            continue
+        seen.add(u)
+        if u == dst:
+            break
+        for v in net.neighbors(u):
+            key = (min(u, v), max(u, v))
+            if v in banned_nodes or key in banned_links:
+                continue
+            nd = d + _edge_cost(net, u, v)
+            if nd < dist.get(v, float("inf")):
+                dist[v] = nd
+                prev[v] = u
+                heapq.heappush(heap, (nd, v))
+    if dst not in seen:
+        return None
+    path = [dst]
+    while path[-1] != src:
+        path.append(prev[path[-1]])
+    return path[::-1]
+
+
+def k_shortest_paths(net: NetworkGraph, src: int, dst: int, k: int) -> list[list[int]]:
+    """Yen's algorithm: up to k loopless paths, shortest first."""
+    if src == dst:
+        return [[src]]
+    first = dijkstra(net, src, dst)
+    if first is None:
+        return []
+    paths = [first]
+    candidates: list[tuple[float, list[int]]] = []
+    cand_set: set[tuple[int, ...]] = set()
+    while len(paths) < k:
+        prev_path = paths[-1]
+        for i in range(len(prev_path) - 1):
+            spur_node = prev_path[i]
+            root = prev_path[: i + 1]
+            banned_links: set[tuple[int, int]] = set()
+            for p in paths:
+                if p[: i + 1] == root and len(p) > i + 1:
+                    u, v = p[i], p[i + 1]
+                    banned_links.add((min(u, v), max(u, v)))
+            banned_nodes = set(root[:-1])
+            spur = dijkstra(
+                net, spur_node, dst, banned_links=banned_links, banned_nodes=banned_nodes
+            )
+            if spur is None:
+                continue
+            total = root[:-1] + spur
+            key = tuple(total)
+            if key in cand_set or any(tuple(p) == key for p in paths):
+                continue
+            cost = sum(_edge_cost(net, total[j], total[j + 1]) for j in range(len(total) - 1))
+            cand_set.add(key)
+            heapq.heappush(candidates, (cost, total))
+        if not candidates:
+            break
+        _, best = heapq.heappop(candidates)
+        paths.append(best)
+    return paths
+
+
+def path_links(net: NetworkGraph, path: list[int]) -> list[int]:
+    """Node path -> link-id list (empty for colocated src==dst)."""
+    return [net.link_id(path[i], path[i + 1]) for i in range(len(path) - 1)]
+
+
+def avg_path_bandwidth(net: NetworkGraph, src: int, dst: int) -> float:
+    """Average bandwidth along the shortest path (Algo 1, line 7 note: 'we set
+    the bandwidth between two edge nodes as the average bandwidth of all
+    routing links'). Infinite for colocated endpoints."""
+    if src == dst:
+        return float("inf")
+    path = dijkstra(net, src, dst)
+    if path is None:
+        return 0.0
+    bws = [net.capacity[l] for l in path_links(net, path)]
+    return float(sum(bws) / len(bws))

@@ -1,0 +1,143 @@
+"""Causal GQA flash attention as a Pallas TPU kernel.
+
+TPU adaptation notes (vs the CUDA FlashAttention-2 schedule):
+  * Tiling targets the MXU: bq x bk = 128 x 128 blocks, head_dim padded to a
+    multiple of 128 lanes by the wrapper (ops.py) when needed.
+  * The KV axis is the innermost *sequential* grid dimension, so the online
+    softmax running state (m, l, acc) lives in VMEM scratch that persists
+    across KV steps — Pallas/TPU's revisiting-output pattern replaces the
+    CUDA shared-memory + warp-shuffle reduction.
+  * Causal block skipping is done with ``pl.when`` predication: skipped
+    blocks issue no MXU work, mirroring FA-2's early-exit loop bound.
+
+Layout: q (B, H, Sq, D), k/v (B, KH, Skv, D) — heads-major so one (b, h)
+program streams contiguous sequence tiles. GQA folds the group into the
+query head index (kv head = h // group_size).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # (1, 1, bq, D)
+    k_ref,  # (1, 1, bk, D)
+    v_ref,  # (1, 1, bk, D)
+    o_ref,  # (1, 1, bq, D)
+    m_scr,  # (bq,) f32
+    l_scr,  # (bq,) f32
+    acc_scr,  # (bq, D) f32
+    *,
+    bq: int,
+    bk: int,
+    n_k: int,
+    scale: float,
+    causal: bool,
+    window: int,
+):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = kj * bk
+    # any overlap with the causal (and window) band?
+    live = True
+    if causal:
+        live = k_start <= q_start + bq - 1
+    if window > 0:
+        live = jnp.logical_and(live, k_start + bk - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bk)
+        pos_q = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        pos_k = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= pos_k <= pos_q
+        if window > 0:
+            mask &= pos_k > pos_q - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(kj == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_hsd(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, KH, Skv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    KH, Skv = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = D**-0.5 if scale is None else scale
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    n_q, n_k = Sq // bq, Skv // bk
+    grid = (B, H, n_q, n_k)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        bq=bq,
+        bk=bk,
+        n_k=n_k,
+        scale=scale,
+        causal=causal,
+        window=window,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

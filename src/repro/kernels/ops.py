@@ -1,0 +1,84 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+The model code calls these when ``use_pallas=True`` (real TPU); on CPU the
+models use the pure-jnp twins and the kernels are validated in interpret
+mode by the test suite. Wrappers handle layout transposition (models are
+sequence-major ``(B, S, H, D)``, kernels heads-major ``(B, H, S, D)``) and
+TPU tile-alignment padding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_hsd
+from .rwkv6 import rwkv6_scan_hsd
+from .ssd import ssd_scan_hsd
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # (B, S, H, D) — model layout
+    k: jax.Array,  # (B, S, KH, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    out = flash_attention_hsd(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=interpret,
+    )
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,  # (B, S, H, P) — model layout
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> jax.Array:
+    y = ssd_scan_hsd(
+        x.transpose(0, 2, 1, 3),
+        dt.transpose(0, 2, 1),
+        A,
+        Bm,
+        Cm,
+        chunk=chunk,
+        interpret=interpret,
+    )
+    return y.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(
+    r: jax.Array,  # (B, S, H, P) — model layout
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,
+    u: jax.Array,  # (H, P)
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> jax.Array:
+    t = lambda a: a.transpose(0, 2, 1, 3)
+    y = rwkv6_scan_hsd(t(r), t(k), t(v), t(logw), u, chunk=chunk, interpret=interpret)
+    return y.transpose(0, 2, 1, 3)

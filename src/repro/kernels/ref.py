@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These delegate to (or mirror) the model-side reference implementations so a
+single source of truth defines the math; layouts are adapted to the kernels'
+heads-major convention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.ssm import rwkv6_sequential, ssd_sequential
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, KH, Skv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    KH, Skv = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = D**-0.5 if scale is None else scale
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhid,bhjd->bhij", q.astype(jnp.float32), kk.astype(jnp.float32)) * scale
+    i = jnp.arange(Sq)[:, None] + (Skv - Sq)  # right-aligned when Sq < Skv
+    j = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= j <= i
+    if window > 0:
+        mask &= j > i - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhij,bhjd->bhid", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm):
+    """(B,H,S,P) layout wrapper over the sequential ground truth."""
+    y, _ = ssd_sequential(
+        jnp.moveaxis(x, 1, 2), jnp.moveaxis(dt, 1, 2), A, Bm, Cm
+    )
+    return jnp.moveaxis(y, 2, 1)
+
+
+def rwkv6_scan_ref(r, k, v, logw, u):
+    """(B,H,S,P) layout wrapper over the sequential ground truth."""
+    args = [jnp.moveaxis(t, 1, 2) for t in (r, k, v, logw)]
+    y, _ = rwkv6_sequential(*args, u)
+    return jnp.moveaxis(y, 2, 1)

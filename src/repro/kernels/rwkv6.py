@@ -1,0 +1,98 @@
+"""RWKV-6 (Finch) chunked linear-attention scan as a Pallas TPU kernel.
+
+One program = one (batch, head, chunk) with the per-head wkv state (P x P,
+fp32) carried in VMEM scratch across the sequential chunk grid axis. The
+per-channel data-dependent decay is handled in log space; the pairwise
+in-chunk decay factorizes *exactly* against the chunk start: the q-side
+factor exp(cw_prev) is <= 1 and the k-side factor exp(-cw) is bounded by
+e^(Q*|logw|_max) — fp32-safe for Q = 16 under the model's decay clamp
+(|logw| <= e, see models/ssm.py::_rwkv6_decay). Production kernels would
+tile 16-sub-chunks inside a 64-wide MXU block; the math is identical.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv6_kernel(
+    r_ref,  # (1, 1, Q, P)
+    k_ref,
+    v_ref,
+    lw_ref,  # (1, 1, Q, P) log decay, <= 0
+    u_ref,  # (1, P)
+    y_ref,  # (1, 1, Q, P)
+    state,  # scratch (P, P) f32 — S[p_key, p_val]
+    *,
+    q_len: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    f32 = jnp.float32
+    r = r_ref[0, 0].astype(f32)  # (Q, P)
+    k = k_ref[0, 0].astype(f32)
+    v = v_ref[0, 0].astype(f32)
+    lw = lw_ref[0, 0].astype(f32)
+    u = u_ref[0].astype(f32)  # (P,)
+
+    cw = jnp.cumsum(lw, axis=0)  # inclusive
+    cw_prev = cw - lw  # exclusive
+    qn = r * jnp.exp(cw_prev)  # <= 1
+    kn = k * jnp.exp(-cw)  # <= e^(Q |logw|_max), fp32-safe for Q <= 16
+    A = jax.lax.dot_general(qn, kn, (((1,), (1,)), ((), ())), preferred_element_type=f32)
+    strict = (
+        jax.lax.broadcasted_iota(jnp.int32, (q_len, q_len), 0)
+        > jax.lax.broadcasted_iota(jnp.int32, (q_len, q_len), 1)
+    )
+    A = jnp.where(strict, A, 0.0)
+    bonus = jnp.sum(r * u[None, :] * k, axis=1)  # (Q,)
+    eye = (
+        jax.lax.broadcasted_iota(jnp.int32, (q_len, q_len), 0)
+        == jax.lax.broadcasted_iota(jnp.int32, (q_len, q_len), 1)
+    )
+    A = A + jnp.where(eye, bonus[:, None], 0.0)
+    y = jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())), preferred_element_type=f32)
+    y = y + jax.lax.dot_general(
+        r * jnp.exp(cw_prev), state[...], (((1,), (0,)), ((), ())), preferred_element_type=f32
+    )
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    kdec = k * jnp.exp(cw[-1][None, :] - cw)  # decay to chunk end (<= 0 exps)
+    state[...] = state[...] * jnp.exp(cw[-1])[:, None] + jax.lax.dot_general(
+        kdec, v, (((0,), (0,)), ((), ())), preferred_element_type=f32
+    )
+
+
+def rwkv6_scan_hsd(
+    r: jax.Array,  # (B, H, S, P)
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,  # (B, H, S, P)
+    u: jax.Array,  # (H, P)
+    *,
+    chunk: int = 16,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, S, P = r.shape
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+    grid = (B, H, nc)
+    kernel = functools.partial(_rwkv6_kernel, q_len=Q)
+    spec = pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec, pl.BlockSpec((1, P), lambda b, h, c: (h, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, S, P), r.dtype),
+        scratch_shapes=[pltpu.VMEM((P, P), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)

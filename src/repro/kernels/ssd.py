@@ -1,0 +1,101 @@
+"""Mamba-2 SSD chunked scan as a Pallas TPU kernel.
+
+One program = one (batch, head, chunk); the chunk axis is the innermost
+sequential grid dimension so the inter-chunk SSM state (N x P, fp32) lives in
+VMEM scratch and is carried across chunks — the TPU version of the
+"chunk-parallel + state passing" SSD schedule (Mamba-2 paper, Listing 1),
+with the intra-chunk quadratic form mapped onto MXU matmuls.
+
+Layouts: x (B, H, S, P), dt (B, H, S), B/C (B, S, N) shared across heads.
+Chunk length Q is a multiple of 8 (sublane) and N, P multiples of 128 when
+run on real TPU; the wrapper pads as needed (interpret mode is exact).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,  # (1, 1, Q, P)
+    dt_ref,  # (1, 1, Q)
+    a_ref,  # (1,)
+    b_ref,  # (1, Q, N)
+    c_ref,  # (1, Q, N)
+    y_ref,  # (1, 1, Q, P)
+    state,  # scratch (N, P) f32
+    *,
+    q_len: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    x = x_ref[0, 0].astype(jnp.float32)  # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (Q,)
+    a = a_ref[0].astype(jnp.float32)  # scalar, negative
+    Bm = b_ref[0].astype(jnp.float32)  # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)  # (Q, N)
+
+    la = dt * a  # (Q,) log-decay
+    cum = jnp.cumsum(la)  # inclusive
+    # intra-chunk: y_i += sum_{j<=i} (C_i.B_j) exp(cum_i-cum_j) dt_j x_j
+    G = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    diff = cum[:, None] - cum[None, :]
+    tril = (
+        jax.lax.broadcasted_iota(jnp.int32, (q_len, q_len), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (q_len, q_len), 1)
+    )
+    W = jnp.where(tril, G * jnp.exp(diff), 0.0) * dt[None, :]
+    y = jax.lax.dot_general(W, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    # inter-chunk: y_i += exp(cum_i) * C_i . state_prev
+    cs = jax.lax.dot_general(
+        Cm, state[...], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    y = y + cs * jnp.exp(cum)[:, None]
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    # state update: S = exp(cum_Q) S + sum_j exp(cum_Q - cum_j) dt_j B_j x_j^T
+    wgt = (dt * jnp.exp(cum[-1] - cum))[:, None] * Bm  # (Q, N)
+    state[...] = state[...] * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        wgt, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def ssd_scan_hsd(
+    x: jax.Array,  # (B, H, S, P)
+    dt: jax.Array,  # (B, H, S)
+    A: jax.Array,  # (H,) negative
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, S, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+    grid = (B, H, nc)
+    kernel = functools.partial(_ssd_kernel, q_len=Q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, Q), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)

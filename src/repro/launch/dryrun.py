@@ -1,0 +1,369 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch x shape x mesh)
+cell and record memory/cost/collective analysis for the roofline.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first init). This flag is set here and ONLY here — tests and
+benchmarks see the real single CPU device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b \
+      --cell train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out benchmarks/results
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import functools  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from ..configs import ARCH_IDS, get_config  # noqa: E402
+from ..configs.shapes import CELLS, applicable  # noqa: E402
+from ..models import decode_step, init_cache, prefill  # noqa: E402
+from ..models import hints  # noqa: E402
+from ..optim import AdamWConfig  # noqa: E402
+from ..train import TrainConfig, init_train_state, make_train_step  # noqa: E402
+from .mesh import batch_axes, make_production_mesh  # noqa: E402
+from .sharding import (  # noqa: E402
+    batch_specs,
+    tree_cache_specs,
+    tree_param_specs,
+    train_state_specs,
+)
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+def input_specs(arch: str, cell_name: str, cfg=None) -> dict:
+    """ShapeDtypeStructs for every model input of this (arch, cell)."""
+    cfg = cfg or get_config(arch)
+    cell = CELLS[cell_name]
+    B = cell.global_batch
+    s_text = cell.seq_len - (cfg.frontend_tokens if cfg.frontend else 0)
+    sds = jax.ShapeDtypeStruct
+    if cell.kind == "train":
+        out = {
+            "tokens": sds((B, s_text), jnp.int32),
+            "labels": sds((B, s_text), jnp.int32),
+        }
+        if cfg.frontend:
+            out["frontend_embeds"] = sds((B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+        return out
+    if cell.kind == "prefill":
+        out = {"tokens": sds((B, s_text), jnp.int32)}
+        if cfg.frontend:
+            out["frontend_embeds"] = sds((B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+        return out
+    if cell.kind == "decode":
+        cache = jax.eval_shape(lambda: init_cache(cfg, B, cell.seq_len))
+        return {"tokens": sds((B, 1), jnp.int32), "cache": cache}
+    raise ValueError(cell.kind)
+
+
+def _opt_cfg(cfg) -> AdamWConfig:
+    return AdamWConfig(
+        moment_dtype=cfg.optimizer_state_dtype,
+        factored_second_moment=cfg.optimizer_factored,
+    )
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec),
+    )
+
+
+def sharded_bytes(shape_tree, spec_tree, mesh) -> int:
+    """Static per-device bytes of a sharded pytree (params/opt/cache)."""
+    total = 0
+    for leaf, spec in zip(
+        jax.tree.leaves(shape_tree),
+        jax.tree.leaves(spec_tree, is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec)),
+    ):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        shards = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            for ax in entry if isinstance(entry, tuple) else (entry,):
+                shards *= mesh.shape[ax]
+        total += n * leaf.dtype.itemsize // max(shards, 1)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+def lower_cell(arch: str, cell_name: str, mesh, cfg=None):
+    """Returns (lowered, aux_info). Pure lowering; compile separately.
+    ``cfg`` overrides the registered config (used for the reduced-depth
+    variants that calibrate the scan-body cost, see ``run_cell``)."""
+    cfg = cfg or get_config(arch)
+    cell = CELLS[cell_name]
+    ins = input_specs(arch, cell_name, cfg)
+    key_shape = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    from . import variants
+
+    act = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec(batch_axes(mesh), "model", None)
+    )
+    use_act = cell.kind in ("train", "prefill") and variants.KNOBS["act_sharding"] == "seq"
+    hints.set_activation_sharding(act if use_act else None)
+    moe_s = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec(batch_axes(mesh), "model", None, None)
+    )
+    hints.set_moe_sharding(moe_s if variants.KNOBS["moe_constraints"] else None)
+
+    if cell.kind == "train":
+        opt_cfg = _opt_cfg(cfg)
+        state_shapes = jax.eval_shape(
+            functools.partial(init_train_state, cfg, opt_cfg), jax.random.PRNGKey(0)
+        )
+        st_specs = train_state_specs(mesh, state_shapes, fsdp_over_pods=cfg.fsdp_over_pods)
+        b_specs = batch_specs(mesh, ins)
+        step = make_train_step(cfg, opt_cfg, TrainConfig())
+        jitted = jax.jit(
+            step,
+            in_shardings=(_named(mesh, st_specs), _named(mesh, b_specs)),
+            out_shardings=(_named(mesh, st_specs), None),
+        )
+        lowered = jitted.lower(state_shapes, ins)
+        static_bytes = sharded_bytes(state_shapes, st_specs, mesh)
+        return lowered, {"static_state_bytes_per_device": static_bytes}
+
+    params_shapes = jax.eval_shape(
+        functools.partial(_init_params_only, cfg), key_shape
+    )
+    p_specs = tree_param_specs(mesh, params_shapes, fsdp_over_pods=cfg.fsdp_over_pods)
+    static_bytes = sharded_bytes(params_shapes, p_specs, mesh)
+
+    if cell.kind == "prefill":
+        b_specs = batch_specs(mesh, ins)
+        fn = lambda p, batch: prefill(p, cfg, batch["tokens"], batch.get("frontend_embeds"))
+        jitted = jax.jit(
+            fn,
+            in_shardings=(_named(mesh, p_specs), _named(mesh, b_specs)),
+        )
+        lowered = jitted.lower(params_shapes, ins)
+        return lowered, {"static_state_bytes_per_device": static_bytes}
+
+    # decode
+    cache_shapes = ins["cache"]
+    c_specs = tree_cache_specs(mesh, cache_shapes)
+    tok_spec = batch_specs(mesh, {"tokens": ins["tokens"]})["tokens"]
+    fn = lambda p, c, t: decode_step(p, cfg, c, t)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(
+            _named(mesh, p_specs),
+            _named(mesh, c_specs),
+            jax.sharding.NamedSharding(mesh, tok_spec),
+        ),
+        out_shardings=(None, _named(mesh, c_specs)),
+    )
+    lowered = jitted.lower(params_shapes, cache_shapes, ins["tokens"])
+    static_bytes += sharded_bytes(cache_shapes, c_specs, mesh)
+    return lowered, {"static_state_bytes_per_device": static_bytes}
+
+
+def _init_params_only(cfg, key):
+    from ..models import init_params
+
+    return init_params(cfg, key)
+
+
+# ---------------------------------------------------------------------------
+# analysis
+# ---------------------------------------------------------------------------
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\("
+)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in post-SPMD HLO.
+    ``*-done`` ops are skipped (their ``*-start`` twin was counted)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        op = m.group(1)
+        lhs = line.split("=")[0] + "=" + line.split("=", 1)[1].split(m.group(1))[0]
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(lhs):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[op] += nbytes
+        counts[op] += 1
+    out["counts"] = counts
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def analyze(lowered, compiled) -> dict:
+    cost = compiled.cost_analysis() or {}
+    info: dict = {
+        "flops": float(cost.get("flops", -1.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+    }
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            info["memory"] = {
+                "argument_bytes": int(getattr(ma, "argument_size_in_bytes", -1)),
+                "output_bytes": int(getattr(ma, "output_size_in_bytes", -1)),
+                "temp_bytes": int(getattr(ma, "temp_size_in_bytes", -1)),
+                "generated_code_bytes": int(getattr(ma, "generated_code_size_in_bytes", -1)),
+            }
+    except Exception as e:  # CPU backend may not support it
+        info["memory_error"] = str(e)
+    info["collectives"] = collective_bytes(compiled.as_text())
+    return info
+
+
+def _scan_corrected(arch: str, cell_name: str, mesh) -> dict:
+    """XLA's cost_analysis counts a while-loop (scan) body ONCE regardless of
+    trip count, so the reported FLOPs/bytes/collectives of a G-group layer
+    scan understate by ~G x. Calibrate exactly: compile *unrolled* 1-group
+    and 2-group variants (the pattern moved into ``prefix``, which applies
+    blocks in a Python loop — same remat semantics, see stack_apply), diff
+    them for the true per-group cost, and extrapolate linearly. Exact
+    because pattern groups are homogeneous by construction."""
+    cfg = get_config(arch)
+    g_full = cfg.n_pattern_repeats
+    if g_full == 0:
+        return {}
+    vals = {}
+    for g in (1, 2):
+        sub = dataclasses.replace(
+            cfg,
+            prefix=cfg.prefix + cfg.pattern * g,
+            pattern=(),
+            n_pattern_repeats=0,
+        )
+        lowered, _ = lower_cell(arch, cell_name, mesh, cfg=sub)
+        compiled = lowered.compile()
+        vals[g] = analyze(lowered, compiled)
+    out = {}
+    for key in ("flops", "bytes_accessed"):
+        d = vals[2][key] - vals[1][key]
+        out[key] = vals[1][key] + (g_full - 1) * d
+    coll = {}
+    for op in _COLLECTIVES + ("total",):
+        d = vals[2]["collectives"][op] - vals[1]["collectives"][op]
+        coll[op] = vals[1]["collectives"][op] + (g_full - 1) * d
+    out["collectives"] = coll
+    return {"corrected": out}
+
+
+def run_cell(arch: str, cell_name: str, mesh, mesh_name: str, *, calibrate: bool = True) -> dict:
+    t0 = time.time()
+    rec = {"arch": arch, "cell": cell_name, "mesh": mesh_name}
+    try:
+        lowered, aux = lower_cell(arch, cell_name, mesh)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        rec.update(aux)
+        rec.update(analyze(lowered, compiled))
+        if calibrate:
+            rec.update(_scan_corrected(arch, cell_name, mesh))
+        rec["lower_s"] = round(t1 - t0, 1)
+        rec["compile_s"] = round(t2 - t1, 1)
+        rec["ok"] = True
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--cell", choices=list(CELLS))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results")
+    ap.add_argument("--resume", action="store_true", help="skip cells already recorded")
+    args = ap.parse_args()
+
+    meshes = {}
+    if args.mesh in ("single", "both"):
+        meshes["single"] = make_production_mesh(multi_pod=False)
+    if args.mesh in ("multi", "both"):
+        meshes["multi"] = make_production_mesh(multi_pod=True)
+
+    cells: list[tuple[str, str]]
+    if args.all:
+        cells = [(a, c) for a in ARCH_IDS for c in CELLS if applicable(a, c)]
+    else:
+        assert args.arch and args.cell, "--arch/--cell or --all"
+        if not applicable(args.arch, args.cell):
+            print(f"SKIP {args.arch} x {args.cell}: inapplicable (sub-quadratic only)")
+            return
+        cells = [(args.arch, args.cell)]
+
+    os.makedirs(args.out, exist_ok=True)
+    for mesh_name, mesh in meshes.items():
+        path = os.path.join(args.out, f"dryrun_{mesh_name}.jsonl")
+        done = set()
+        if args.resume and os.path.exists(path):
+            with open(path) as f:
+                for line in f:
+                    r = json.loads(line)
+                    if r.get("ok"):
+                        done.add((r["arch"], r["cell"]))
+        with open(path, "a") as f:
+            for arch, cell in cells:
+                if (arch, cell) in done:
+                    print(f"[{mesh_name}] {arch} x {cell}: already done")
+                    continue
+                # cost calibration feeds the single-pod roofline table; the
+                # multi-pod pass only has to prove compile + memory
+                rec = run_cell(arch, cell, mesh, mesh_name, calibrate=(mesh_name == "single"))
+                tb = rec.pop("traceback", None)
+                status = "OK" if rec["ok"] else f"FAIL ({rec.get('error')})"
+                print(
+                    f"[{mesh_name}] {arch} x {cell}: {status} "
+                    f"lower={rec.get('lower_s')}s compile={rec.get('compile_s')}s "
+                    f"flops={rec.get('flops'):.3e} coll={rec.get('collectives', {}).get('total', 0):.3e}B"
+                    if rec["ok"]
+                    else f"[{mesh_name}] {arch} x {cell}: {status}"
+                )
+                if tb and not rec["ok"]:
+                    print(tb)
+                f.write(json.dumps(rec) + "\n")
+                f.flush()
+
+
+if __name__ == "__main__":
+    main()

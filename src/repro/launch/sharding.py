@@ -1,0 +1,175 @@
+"""PartitionSpec rules for parameters, optimizer state, batches and caches.
+
+Weight sharding (GSPMD logical rules):
+  * parameters shard over ``data`` (FSDP / ZeRO-3 gather-on-use) and
+    ``model`` (tensor parallel); never over ``pod`` (pure DP across DCN);
+  * expert weights (E, d, f) put ``model`` on E — expert parallelism — and
+    ``data`` on the second dim;
+  * embedding tables (V, d) put ``model`` on V so the logits einsum is
+    communication-free into (batch->data, vocab->model) sharded logits;
+  * scan-stacked leaves keep their leading group axis unsharded;
+  * 1-D leaves (norm scales, biases) replicate.
+
+Optimizer moments inherit the parameter spec verbatim (ZeRO-1). A dim is
+sharded only if exactly divisible by the axis size — otherwise it stays
+replicated (e.g. 8-KV-head caches on a 16-wide model axis).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from .mesh import batch_axes
+
+EXPERT_LEAVES = ("w_up", "w_gate", "w_down")
+
+
+def _path_names(path) -> list[str]:
+    return [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+
+
+def _axis_size(mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def _fsdp_axes(mesh, over_pods: bool):
+    """The axis (or axes) FSDP shards weights over."""
+    if over_pods and "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return ("data",)
+
+
+def param_spec(mesh, names: list[str], shape: tuple[int, ...], *, fsdp=("data",)) -> P:
+    model = _axis_size(mesh, "model")
+    fsdp = tuple(a for a in fsdp if a in mesh.axis_names)
+    fsdp_size = 1
+    for a in fsdp:
+        fsdp_size *= _axis_size(mesh, a)
+    fsdp_entry = (fsdp if len(fsdp) > 1 else fsdp[0]) if fsdp else None
+
+    def fsdp_ok(d: int) -> bool:  # replicated-params variant: fsdp == ()
+        return bool(fsdp) and d % fsdp_size == 0
+    stacked = "groups" in names
+    lead = 1 if stacked else 0
+    dims = list(shape)
+    leaf = names[-1]
+
+    if leaf in ("embed", "unembed"):
+        spec = [None] * len(dims)
+        if dims[0] % model == 0:
+            spec[0] = "model"
+        if fsdp_ok(dims[1]):
+            spec[1] = fsdp_entry
+        return P(*spec)
+    if leaf in EXPERT_LEAVES and "moe" in names:
+        # (G?, E, a, b): E -> model (EP), a -> fsdp
+        spec = [None] * len(dims)
+        if dims[lead] % model == 0:
+            spec[lead] = "model"
+        if len(dims) > lead + 1 and fsdp_ok(dims[lead + 1]):
+            spec[lead + 1] = fsdp_entry
+        return P(*spec)
+    if len(dims) - lead <= 1:
+        return P()  # 1-D leaves replicate
+    spec: list[Any] = [None] * len(dims)
+    # model on the last dim, fsdp on the first shardable dim
+    if dims[-1] % model == 0:
+        spec[-1] = "model"
+    for i in range(lead, len(dims) - 1):
+        if fsdp_ok(dims[i]):
+            spec[i] = fsdp_entry
+            break
+    return P(*spec)
+
+
+def tree_param_specs(mesh, tree, *, fsdp_over_pods: bool = False) -> Any:
+    """Spec pytree matching ``tree`` (arrays or ShapeDtypeStructs)."""
+    from . import variants
+
+    fsdp = _fsdp_axes(mesh, fsdp_over_pods) if variants.KNOBS["fsdp_params"] else ()
+
+    def spec(path, leaf):
+        return param_spec(mesh, _path_names(path), tuple(leaf.shape), fsdp=fsdp)
+
+    return jax.tree_util.tree_map_with_path(spec, tree)
+
+
+def opt_state_specs(mesh, param_specs: Any, opt_shapes: dict) -> dict:
+    """Moments inherit the parameter spec (ZeRO-1); factored second-moment
+    vectors inherit the spec minus the reduced dimension."""
+    is_spec = lambda s: isinstance(s, P)
+    out = {"m": param_specs, "step": P()}
+    if "v" in opt_shapes:
+        out["v"] = param_specs
+        return out
+    out["v_r"] = jax.tree.map(
+        lambda s, shp: P(*tuple(s)[: len(shp.shape)]) if len(shp.shape) else P(),
+        param_specs,
+        opt_shapes["v_r"],
+        is_leaf=is_spec,
+    )
+    out["v_c"] = jax.tree.map(
+        lambda s, shp: P() if tuple(shp.shape) == (0,) else P(*(tuple(s)[:-2] + tuple(s)[-1:])),
+        param_specs,
+        opt_shapes["v_c"],
+        is_leaf=is_spec,
+    )
+    return out
+
+
+def train_state_specs(mesh, state_shapes, *, fsdp_over_pods: bool = False) -> dict:
+    ps = tree_param_specs(mesh, state_shapes["params"], fsdp_over_pods=fsdp_over_pods)
+    return {
+        "params": ps,
+        "opt": opt_state_specs(mesh, ps, state_shapes["opt"]),
+        "step": P(),
+    }
+
+
+def batch_specs(mesh, batch_shapes) -> dict:
+    b = batch_axes(mesh)
+    bsz = 1
+    for a in b:
+        bsz *= _axis_size(mesh, a)
+    out = {}
+    for k, v in batch_shapes.items():
+        spec: list[Any] = [None] * len(v.shape)
+        if v.shape[0] % bsz == 0:
+            spec[0] = b
+        out[k] = P(*spec)
+    return out
+
+
+def cache_spec(mesh, names: list[str], shape: tuple[int, ...]) -> P:
+    """Decode caches: batch -> (pod, data) when divisible; otherwise (the
+    long_500k single-sequence cell) shard the sequence axis of KV caches
+    over data. KV heads shard over model only when divisible."""
+    b = batch_axes(mesh)
+    bsz = 1
+    for a in b:
+        bsz *= _axis_size(mesh, a)
+    model = _axis_size(mesh, "model")
+    data = _axis_size(mesh, "data")
+    stacked = "groups" in names
+    lead = 1 if stacked else 0
+    leaf = names[-1]
+    spec: list[Any] = [None] * len(shape)
+    if leaf == "length":
+        return P()
+    batch_ax = lead
+    if shape[batch_ax] % bsz == 0:
+        spec[batch_ax] = b
+    elif leaf in ("k", "v", "ckv", "kpe") and shape[batch_ax + 1] % data == 0:
+        spec[batch_ax + 1] = "data"  # long-context: shard the sequence
+    if leaf in ("k", "v") and len(shape) > batch_ax + 2 and shape[batch_ax + 2] % model == 0:
+        spec[batch_ax + 2] = "model"  # KV heads
+    return P(*spec)
+
+
+def tree_cache_specs(mesh, cache_shapes) -> Any:
+    def spec(path, leaf):
+        return cache_spec(mesh, _path_names(path), tuple(leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)

@@ -1,0 +1,31 @@
+"""Named sharding/layout variants for the §Perf hillclimb.
+
+``activate(name)`` flips module-level knobs consumed by the sharding rules
+and model hints. Production defaults incorporate the confirmed hillclimb
+wins (EXPERIMENTS.md §Perf): MoE dispatch buffers are EP-layout-pinned
+(-66% collective term on deepseek-v2-lite train_4k). ``baseline``
+reproduces the §Roofline baseline table exactly.
+"""
+from __future__ import annotations
+
+_DEFAULTS = {
+    "fsdp_params": True,  # False => weights replicated across 'data' (pure TP+DP)
+    "act_sharding": "seq",  # "seq" | "none" — layer-boundary activation layout
+    "moe_constraints": True,  # EP layout pins on the dispatch buffers (§Perf.3)
+}
+
+KNOBS = dict(_DEFAULTS)
+
+VARIANTS = {
+    "default": {},
+    "baseline": {"moe_constraints": False},  # the §Roofline baseline table
+    "replicated-params": {"fsdp_params": False},
+    "no-act-sharding": {"act_sharding": "none"},
+    "moe-ep-pinned": {"moe_constraints": True},
+    "replicated+moe": {"fsdp_params": False, "moe_constraints": True},
+}
+
+
+def activate(name: str) -> None:
+    KNOBS.update(_DEFAULTS)
+    KNOBS.update(VARIANTS[name])

@@ -1,0 +1,6 @@
+"""Model substrate: one composable decoder covering all 10 assigned
+architectures (GQA / MLA / sliding-window attention, dense & MoE channel
+mixers, Mamba-2 and RWKV-6 sequence mixers, modality-frontend stubs)."""
+from .model import decode_step, forward, init_cache, init_params, prefill
+
+__all__ = ["decode_step", "forward", "init_cache", "init_params", "prefill"]

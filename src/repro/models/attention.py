@@ -1,0 +1,288 @@
+"""Attention mixers: GQA (full / sliding-window) and MLA, with blockwise
+online-softmax attention for train/prefill and cache-based decode.
+
+The blockwise implementation is the pure-jnp twin of the Pallas flash
+kernel (``kernels/flash_attention.py``): scores never materialize beyond a
+(Cq, Ck) tile, and causality *skips* non-intersecting KV blocks statically
+(no wasted FLOPs in the compiled HLO — this matters for the roofline's
+MODEL_FLOPS/HLO_FLOPs ratio).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense_init
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Blockwise causal attention (train / prefill)
+# ---------------------------------------------------------------------------
+def blockwise_attention(
+    q: Array,  # (B, S, H, Dk)
+    k: Array,  # (B, S, KH, Dk)
+    v: Array,  # (B, S, KH, Dv)
+    *,
+    window: int = 0,  # 0 = full causal; >0 sliding window
+    chunk: int = 1024,
+    scale: float | None = None,
+) -> Array:
+    B, S, H, Dk = q.shape
+    KH, Dv = k.shape[2], v.shape[-1]
+    G = H // KH
+    scale = scale if scale is not None else Dk**-0.5
+    chunk = min(chunk, S)
+    assert S % chunk == 0, f"seq {S} not divisible by chunk {chunk}"
+    nq = S // chunk
+    qc = q.reshape(B, nq, chunk, KH, G, Dk)
+    kc = jnp.moveaxis(k.reshape(B, nq, chunk, KH, Dk), 1, 0)  # (nq, B, C, KH, Dk)
+    vc = jnp.moveaxis(v.reshape(B, nq, chunk, KH, Dv), 1, 0)
+    span = nq if window == 0 else min(nq, (window + chunk - 1) // chunk + 1)
+
+    outs = []
+    for qi in range(nq):
+        lo = max(0, qi - span + 1)
+        qblk = qc[:, qi].astype(jnp.float32) * scale  # (B, C, KH, G, Dk)
+        pos_q = qi * chunk + jnp.arange(chunk)
+
+        def step(carry, xs, pos_q=pos_q, qblk=qblk):
+            m, l, acc = carry
+            kblk, vblk, kv_idx = xs
+            s = jnp.einsum(
+                "bikgd,bjkd->bikgj", qblk, kblk.astype(jnp.float32)
+            )  # (B, C, KH, G, Cj)
+            pos_k = kv_idx * chunk + jnp.arange(chunk)
+            causal = pos_k[None, :] <= pos_q[:, None]
+            if window > 0:
+                causal &= pos_k[None, :] > pos_q[:, None] - window
+            s = jnp.where(causal[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bikgj,bjkd->bikgd", p, vblk.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, chunk, KH, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, chunk, KH, G), jnp.float32)
+        a0 = jnp.zeros((B, chunk, KH, G, Dv), jnp.float32)
+        xs = (kc[lo : qi + 1], vc[lo : qi + 1], jnp.arange(lo, qi + 1))
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), xs)
+        outs.append(acc / jnp.maximum(l[..., None], 1e-30))
+    out = jnp.stack(outs, axis=1)  # (B, nq, C, KH, G, Dv)
+    return out.reshape(B, S, H, Dv).astype(q.dtype)
+
+
+def _lengths(length: Array, batch: int) -> Array:
+    """Normalize scalar or (B,) lengths to (B,) — per-sequence lengths are
+    what continuous batching needs (serving/engine.py)."""
+    return jnp.broadcast_to(jnp.asarray(length, jnp.int32), (batch,))
+
+
+def _cache_write(cache: Array, new: Array, slots: Array) -> Array:
+    """Per-sequence dynamic write: cache (B, Smax, ...), new (B, 1, ...),
+    slots (B,)."""
+    return jax.vmap(
+        lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(c, n, s, axis=0)
+    )(cache, new, slots)
+
+
+def decode_attention(
+    q: Array,  # (B, 1, H, Dk)
+    k_cache: Array,  # (B, Smax, KH, Dk)
+    v_cache: Array,  # (B, Smax, KH, Dv)
+    length: Array,  # () or (B,) int32 — valid entries (current token written)
+    *,
+    window: int = 0,
+    scale: float | None = None,
+) -> Array:
+    B, _, H, Dk = q.shape
+    KH = k_cache.shape[2]
+    G = H // KH
+    scale = scale if scale is not None else Dk**-0.5
+    lengths = _lengths(length, B)
+    qf = q.reshape(B, KH, G, Dk).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,bjkd->bkgj", qf, k_cache.astype(jnp.float32))
+    pos = jnp.arange(k_cache.shape[1])
+    valid = pos[None, :] < lengths[:, None]  # (B, Smax)
+    if window > 0:
+        valid &= pos[None, :] >= (lengths[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgj,bjkd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, -1).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA mixer (also sliding-window "swa")
+# ---------------------------------------------------------------------------
+def gqa_init(key, cfg, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    d, H, KH, Dh, Dv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.v_head_dim
+    return {
+        "wq": dense_init(ks[0], d, H * Dh, dtype),
+        "wk": dense_init(ks[1], d, KH * Dh, dtype),
+        "wv": dense_init(ks[2], d, KH * Dv, dtype),
+        "wo": dense_init(ks[3], H * Dv, d, dtype),
+    }
+
+
+def gqa_apply(p: dict, cfg, x: Array, *, window: int = 0, chunk: int = 1024) -> Array:
+    B, S, d = x.shape
+    H, KH, Dh, Dv = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.v_head_dim
+    pos = jnp.arange(S)
+    q = apply_rope((x @ p["wq"]).reshape(B, S, H, Dh), pos, cfg.rope_theta)
+    k = apply_rope((x @ p["wk"]).reshape(B, S, KH, Dh), pos, cfg.rope_theta)
+    v = (x @ p["wv"]).reshape(B, S, KH, Dv)
+    o = blockwise_attention(q, k, v, window=window, chunk=chunk)
+    return o.reshape(B, S, H * Dv) @ p["wo"]
+
+
+def gqa_init_cache(cfg, batch: int, max_len: int, window: int, dtype) -> dict:
+    size = max_len if window == 0 else min(window, max_len)
+    KH, Dh, Dv = cfg.n_kv_heads, cfg.head_dim, cfg.v_head_dim
+    return {
+        "k": jnp.zeros((batch, size, KH, Dh), dtype),
+        "v": jnp.zeros((batch, size, KH, Dv), dtype),
+    }
+
+
+def gqa_decode(
+    p: dict, cfg, x: Array, cache: dict, length: Array, *, window: int = 0
+) -> tuple[Array, dict]:
+    """One-token decode. ``length`` = tokens already in the cache, scalar or
+    per-sequence (B,) for continuous batching. Sliding windows use a ring
+    buffer of ``window`` slots."""
+    B, _, d = x.shape
+    H, KH, Dh, Dv = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.v_head_dim
+    lengths = _lengths(length, B)
+    pos = lengths[:, None]  # (B, 1) rope positions
+    q = apply_rope((x @ p["wq"]).reshape(B, 1, H, Dh), pos, cfg.rope_theta)
+    k = apply_rope((x @ p["wk"]).reshape(B, 1, KH, Dh), pos, cfg.rope_theta)
+    v = (x @ p["wv"]).reshape(B, 1, KH, Dv)
+    size = cache["k"].shape[1]
+    slots = lengths % size if window > 0 else lengths
+    k_cache = _cache_write(cache["k"], k, slots)
+    v_cache = _cache_write(cache["v"], v, slots)
+    if window > 0:
+        # ring buffer: everything currently stored is valid once warm
+        eff_len = jnp.minimum(lengths + 1, size)
+        o = decode_attention(q, k_cache, v_cache, eff_len, window=0)
+    else:
+        o = decode_attention(q, k_cache, v_cache, lengths + 1, window=0)
+    out = o.reshape(B, 1, H * Dv) @ p["wo"]
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA mixer (DeepSeek-V2/V3, MiniCPM3)
+# ---------------------------------------------------------------------------
+def mla_init(key, cfg, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    d, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv, r = cfg.head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    p: dict = {}
+    if cfg.q_lora_rank:
+        p["q_down"] = dense_init(ks[0], d, cfg.q_lora_rank, dtype)
+        p["q_norm"] = jnp.ones((cfg.q_lora_rank,), jnp.float32)
+        p["q_up"] = dense_init(ks[1], cfg.q_lora_rank, H * (dn + dr), dtype)
+    else:
+        p["wq"] = dense_init(ks[0], d, H * (dn + dr), dtype)
+    p["kv_down"] = dense_init(ks[2], d, r + dr, dtype)  # -> [c_kv ; k_rope]
+    p["kv_norm"] = jnp.ones((r,), jnp.float32)
+    p["kv_up"] = dense_init(ks[3], r, H * (dn + dv), dtype)
+    p["wo"] = dense_init(ks[4], H * dv, d, dtype)
+    return p
+
+
+def _mla_q(p: dict, cfg, x: Array) -> tuple[Array, Array]:
+    from .layers import rmsnorm
+
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        ql = rmsnorm(p["q_norm"], x @ p["q_down"], cfg.norm_eps)
+        q = (ql @ p["q_up"]).reshape(B, S, H, dn + dr)
+    else:
+        q = (x @ p["wq"]).reshape(B, S, H, dn + dr)
+    return q[..., :dn], q[..., dn:]
+
+
+def mla_apply(p: dict, cfg, x: Array, *, chunk: int = 1024) -> Array:
+    from .layers import rmsnorm
+
+    B, S, _ = x.shape
+    H, dn, dr, dv, r = (
+        cfg.n_heads,
+        cfg.head_dim,
+        cfg.qk_rope_head_dim,
+        cfg.v_head_dim,
+        cfg.kv_lora_rank,
+    )
+    pos = jnp.arange(S)
+    q_nope, q_pe = _mla_q(p, cfg, x)
+    q_pe = apply_rope(q_pe, pos, cfg.rope_theta)
+    kv = x @ p["kv_down"]  # (B, S, r + dr)
+    c_kv = rmsnorm(p["kv_norm"], kv[..., :r], cfg.norm_eps)
+    k_pe = apply_rope(kv[..., None, r:], pos, cfg.rope_theta)  # (B, S, 1, dr)
+    kv_up = (c_kv @ p["kv_up"]).reshape(B, S, H, dn + dv)
+    k_nope, v = kv_up[..., :dn], kv_up[..., dn:]
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe, (B, S, H, dr))], axis=-1)
+    o = blockwise_attention(q, k, v, chunk=chunk, scale=(dn + dr) ** -0.5)
+    return o.reshape(B, S, H * dv) @ p["wo"]
+
+
+def mla_init_cache(cfg, batch: int, max_len: int, dtype) -> dict:
+    """The MLA serving advantage: cache the compressed latent + shared rope
+    key — (r + dr) per position instead of 2*H*Dh."""
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "kpe": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(p: dict, cfg, x: Array, cache: dict, length: Array) -> tuple[Array, dict]:
+    """Absorbed-matmul decode: q is folded through kv_up so attention runs
+    directly against the latent cache (DeepSeek-V2 Sec. 2.1.3)."""
+    from .layers import rmsnorm
+
+    B, _, _ = x.shape
+    H, dn, dr, dv, r = (
+        cfg.n_heads,
+        cfg.head_dim,
+        cfg.qk_rope_head_dim,
+        cfg.v_head_dim,
+        cfg.kv_lora_rank,
+    )
+    lengths = _lengths(length, B)
+    pos = lengths[:, None]  # (B, 1)
+    q_nope, q_pe = _mla_q(p, cfg, x)  # (B,1,H,dn), (B,1,H,dr)
+    q_pe = apply_rope(q_pe, pos, cfg.rope_theta)
+    kv = x @ p["kv_down"]
+    c_kv = rmsnorm(p["kv_norm"], kv[..., :r], cfg.norm_eps)  # (B,1,r)
+    k_pe = apply_rope(kv[..., None, r:], pos, cfg.rope_theta).reshape(B, 1, dr)
+    ckv_cache = _cache_write(cache["ckv"], c_kv, lengths)
+    kpe_cache = _cache_write(cache["kpe"], k_pe, lengths)
+    w_uk = p["kv_up"].reshape(r, H, dn + dv)[..., :dn]  # (r, H, dn)
+    w_uv = p["kv_up"].reshape(r, H, dn + dv)[..., dn:]  # (r, H, dv)
+    q_lat = jnp.einsum("bxhd,rhd->bxhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+    scale = (dn + dr) ** -0.5
+    s = (
+        jnp.einsum("bxhr,bjr->bhj", q_lat, ckv_cache.astype(jnp.float32))
+        + jnp.einsum("bxhd,bjd->bhj", q_pe.astype(jnp.float32), kpe_cache.astype(jnp.float32))
+    ) * scale
+    valid = jnp.arange(ckv_cache.shape[1])[None, :] < (lengths + 1)[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    attn = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhj,bjr->bhr", attn, ckv_cache.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhd->bhd", ctx, w_uv.astype(jnp.float32)).astype(x.dtype)
+    out = o.reshape(B, 1, H * dv) @ p["wo"]
+    return out, {"ckv": ckv_cache, "kpe": kpe_cache}

@@ -1,0 +1,54 @@
+"""Mesh-dependent sharding hints for model internals.
+
+Model code is mesh-agnostic; launchers (dryrun/train/serve) install an
+activation sharding here before tracing. The single consumer today is the
+layer-scan carry: without a constraint, remat saves the (B, S, d) carry
+*replicated over the model axis* — 54 GB/device for deepseek-v3 train_4k —
+with it, saved activations shard over `model` (sequence dimension), the
+standard sequence-parallel activation layout.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+
+_ACTIVATION_SHARDING: Any = None
+_MOE_SHARDING: Any = None  # (G, E, C, d) dispatch-buffer layout pin
+
+
+def set_activation_sharding(sharding) -> None:
+    global _ACTIVATION_SHARDING
+    _ACTIVATION_SHARDING = sharding
+
+
+def constrain_activation(x: jax.Array) -> jax.Array:
+    if _ACTIVATION_SHARDING is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, _ACTIVATION_SHARDING)
+
+
+def set_moe_sharding(sharding) -> None:
+    global _MOE_SHARDING
+    _MOE_SHARDING = sharding
+
+
+def constrain_moe_buffer(x: jax.Array) -> jax.Array:
+    """Pin the (G, E, C, d/f) expert-dispatch buffers so token redistribution
+    happens ONCE (data->expert layout, the EP all-to-all) instead of GSPMD
+    replicating whole buffers (hillclimb iteration: see EXPERIMENTS.md §Perf)."""
+    if _MOE_SHARDING is None or x.ndim != 4:
+        return x
+    return jax.lax.with_sharding_constraint(x, _MOE_SHARDING)
+
+
+@contextlib.contextmanager
+def activation_sharding(sharding):
+    global _ACTIVATION_SHARDING
+    prev = _ACTIVATION_SHARDING
+    _ACTIVATION_SHARDING = sharding
+    try:
+        yield
+    finally:
+        _ACTIVATION_SHARDING = prev

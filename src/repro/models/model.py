@@ -1,0 +1,122 @@
+"""Top-level model API.
+
+``init_params`` / ``forward`` (train + prefill) / ``init_cache`` +
+``decode_step`` (serving). Modality frontends are stubs per the assignment:
+``frontend_embeds`` (precomputed patch/conditioning embeddings) are prepended
+to the token embeddings, and logits are returned for text positions only, so
+``seq_len`` always means the *total* sequence the backbone processes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import embed_apply, embed_init, rmsnorm, rmsnorm_init, unembed_apply
+from .transformer import (
+    pick_chunk,
+    stack_apply,
+    stack_decode,
+    stack_init,
+    stack_init_cache,
+)
+
+Array = jax.Array
+
+
+def param_dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_params(cfg, key: Array) -> dict:
+    dtype = param_dtype(cfg)
+    k_embed, k_unembed, k_stack = jax.random.split(key, 3)
+    p = {
+        "embed": embed_init(k_embed, cfg.vocab, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model),
+        "stack": stack_init(k_stack, cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = embed_init(k_unembed, cfg.vocab, cfg.d_model, dtype)
+    return p
+
+
+def _embed_inputs(p: dict, cfg, tokens: Array, frontend_embeds: Array | None) -> Array:
+    from .hints import constrain_activation
+
+    x = embed_apply(p["embed"], tokens)
+    if cfg.d_model**-0.5 and cfg.tie_embeddings:  # gemma-style embed scaling
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    if cfg.frontend:
+        assert frontend_embeds is not None, f"{cfg.name} needs frontend_embeds"
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+    # pin the embedding-gather output layout before the stack (GSPMD
+    # otherwise materializes a full-batch intermediate for sharded tables)
+    return constrain_activation(x)
+
+
+def forward_hidden(
+    p: dict,
+    cfg,
+    tokens: Array,
+    frontend_embeds: Array | None = None,
+) -> tuple[Array, dict]:
+    """Backbone only: normalized final hidden states for the text positions."""
+    x = _embed_inputs(p, cfg, tokens, frontend_embeds)
+    chunk = pick_chunk(x.shape[1])
+    x, aux = stack_apply(p["stack"], cfg, x, chunk=chunk)
+    x = rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    if cfg.frontend:
+        x = x[:, cfg.frontend_tokens :]
+    return x, aux
+
+
+def forward(
+    p: dict,
+    cfg,
+    tokens: Array,  # (B, S_text)
+    frontend_embeds: Array | None = None,  # (B, frontend_tokens, d)
+    *,
+    return_hidden: bool = False,
+) -> tuple[Array, dict]:
+    """Full-sequence causal forward. Returns (logits (B, S_text, V), aux);
+    with ``return_hidden`` the normalized final hidden state rides along in
+    ``aux['hidden']`` (used by the MTP head in train/train_step.py)."""
+    x, aux = forward_hidden(p, cfg, tokens, frontend_embeds)
+    table = p["embed"] if cfg.tie_embeddings else p["unembed"]
+    if return_hidden:
+        aux = dict(aux, hidden=x)
+    return unembed_apply(table, x), aux
+
+
+def init_cache(cfg, batch: int, max_len: int) -> dict:
+    dtype = param_dtype(cfg)
+    return {
+        "blocks": stack_init_cache(cfg, batch, max_len, dtype),
+        "length": jnp.zeros((batch,), jnp.int32),  # per-sequence lengths
+    }
+
+
+def decode_step(p: dict, cfg, cache: dict, tokens: Array) -> tuple[Array, dict]:
+    """One new token per sequence. tokens: (B, 1) -> logits (B, 1, V).
+    ``cache['length']`` is per-sequence, so ragged continuous batching works
+    (serving/engine.py admits new requests into arbitrary slots)."""
+    x = embed_apply(p["embed"], tokens)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    length = cache["length"]
+    x, new_blocks = stack_decode(p["stack"], cfg, x, cache["blocks"], length)
+    x = rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    table = p["embed"] if cfg.tie_embeddings else p["unembed"]
+    logits = unembed_apply(table, x)
+    return logits, {"blocks": new_blocks, "length": length + 1}
+
+
+def prefill(
+    p: dict, cfg, tokens: Array, frontend_embeds: Array | None = None
+) -> tuple[Array, dict]:
+    """Inference prefill: forward pass, returns last-position logits + aux.
+    The hidden state is sliced *before* unembedding so the (B, S, V) logits
+    tensor never materializes — at 32k x 262k vocab that matters."""
+    x, aux = forward_hidden(p, cfg, tokens, frontend_embeds)
+    table = p["embed"] if cfg.tie_embeddings else p["unembed"]
+    return unembed_apply(table, x[:, -1:]), aux

@@ -1,0 +1,125 @@
+"""Mixture-of-Experts channel mixer (DeepSeek-style: shared + routed,
+top-k, softmax router) with capacity-based grouped dispatch.
+
+Dispatch is *per group* (a group = one sequence in training, the whole batch
+at decode): each group scatters its tokens into an ``(E, C, d)`` buffer via
+rank-in-expert positions computed with one-hot cumsums — no sort, no (T, E, C)
+one-hot dispatch tensor. Groups map 1:1 onto the data-parallel axis so the
+buffer shards as (data, model(E), ., .); expert GEMMs are then fully local
+to the EP shard and the token redistribution is the only communication —
+exactly the all-to-all pattern EP needs (see EXPERIMENTS.md §Perf for the
+shard_map-optimized variant).
+
+FLOPs are ``capacity_factor`` × ideal (tokens over capacity are dropped and
+carried by the residual stream), so the roofline's MODEL_FLOPS/HLO ratio
+stays honest — no dense all-experts fallback.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, mlp_apply, mlp_init
+
+Array = jax.Array
+
+
+def moe_capacity(tokens_per_group: int, cfg) -> int:
+    c = math.ceil(tokens_per_group * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(4, -(-c // 4) * 4)  # >=4, rounded up to a multiple of 4
+
+
+def moe_init(key, cfg, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),
+        "w_up": jax.vmap(lambda k: dense_init(k, d, f, dtype))(jax.random.split(ks[1], E)),
+        "w_down": jax.vmap(lambda k: dense_init(k, f, d, dtype))(jax.random.split(ks[2], E)),
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = jax.vmap(lambda k: dense_init(k, d, f, dtype))(jax.random.split(ks[3], E))
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(
+            ks[4], d, cfg.n_shared_experts * cfg.moe_d_ff, cfg.mlp_gated, dtype
+        )
+    return p
+
+
+def _dispatch_group(x: Array, gates: Array, topi: Array, C: int, cfg) -> tuple[Array, Array, Array]:
+    """One group's scatter. x: (T, d); gates/topi: (T, k).
+
+    Returns (buffer (E*C+1, d), dst (T, k), keep (T, k)); dst == E*C is the
+    overflow slot for capacity-dropped tokens.
+    """
+    T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    counts_so_far = jnp.zeros((E,), jnp.int32)
+    dst = []
+    keep = []
+    for j in range(k):  # static small loop: rank-in-expert per routing choice
+        e_j = topi[:, j]  # (T,)
+        onehot = jax.nn.one_hot(e_j, E, dtype=jnp.int32)  # (T, E)
+        ranks_within = jnp.cumsum(onehot, axis=0) - onehot  # rank among this choice
+        rank = jnp.take_along_axis(ranks_within, e_j[:, None], axis=1)[:, 0]
+        rank = rank + counts_so_far[e_j]
+        counts_so_far = counts_so_far + onehot.sum(axis=0)
+        ok = rank < C
+        dst.append(jnp.where(ok, e_j * C + rank, E * C))
+        keep.append(ok)
+    dst = jnp.stack(dst, axis=1)  # (T, k)
+    keep = jnp.stack(keep, axis=1)
+    buf = jnp.zeros((E * C + 1, d), x.dtype)
+    for j in range(k):
+        buf = buf.at[dst[:, j]].set(x, mode="drop")
+    return buf, dst, keep
+
+
+def moe_apply(p: dict, cfg, x: Array) -> tuple[Array, dict]:
+    """x: (G, T, d) — G groups dispatch independently (G = batch when
+    training, 1 at decode). Returns (y, aux) with load-balance metrics."""
+    G, T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = moe_capacity(T, cfg)
+
+    logits = x.astype(jnp.float32) @ p["router"]  # (G, T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, topi = jax.lax.top_k(probs, k)  # (G, T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    buf, dst, keep = jax.vmap(lambda xx, gg, tt: _dispatch_group(xx, gg, tt, C, cfg))(
+        x, gates, topi
+    )
+    from .hints import constrain_moe_buffer
+
+    ebuf = constrain_moe_buffer(buf[:, : E * C].reshape(G, E, C, d))
+    # expert GEMMs — batched over (G, E); E-sharded => local to the EP shard
+    up = constrain_moe_buffer(jnp.einsum("gecd,edf->gecf", ebuf, p["w_up"]))
+    if "w_gate" in p:
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", ebuf, p["w_gate"])) * up
+    else:
+        h = jax.nn.gelu(up)
+    y_e = constrain_moe_buffer(jnp.einsum("gecf,efd->gecd", h, p["w_down"]))
+    y_flat = jnp.concatenate(
+        [y_e.reshape(G, E * C, d), jnp.zeros((G, 1, d), y_e.dtype)], axis=1
+    )
+    out = jnp.zeros((G, T, d), jnp.float32)
+    for j in range(k):
+        gathered = jnp.take_along_axis(y_flat, dst[:, :, j][..., None], axis=1)
+        w = (gates[:, :, j] * keep[:, :, j])[..., None]
+        out = out + gathered.astype(jnp.float32) * w
+    out = out.astype(x.dtype)
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x)
+
+    # aux: Switch-style load-balance loss + dropped-token fraction
+    me = probs.mean(axis=(0, 1))  # (E,)
+    ce = jax.nn.one_hot(topi[..., 0], E).mean(axis=(0, 1))
+    aux = {
+        "moe_balance_loss": E * jnp.sum(me * ce),
+        "moe_dropped_frac": 1.0 - keep.mean(),
+        "moe_router_zloss": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+    }
+    return out, aux

@@ -1,0 +1,245 @@
+"""Decoder stack: blocks -> (prefix, scanned pattern groups, suffix).
+
+The repeated pattern (``cfg.pattern`` x ``n_pattern_repeats``) runs as one
+``lax.scan`` whose body applies the whole pattern group; parameters are
+stacked over groups. Zamba-style shared attention keeps its single mixer
+parameter set *outside* the scan. ``remat`` checkpoints the scan body.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import hints
+from . import moe as moe_mod
+from . import ssm
+from .layers import mlp_apply, mlp_init, rmsnorm, rmsnorm_init
+
+Array = jax.Array
+
+
+def pick_chunk(s: int, target: int = 1024) -> int:
+    """Largest divisor of ``s`` that is <= target (attention/SSD tiling)."""
+    c = min(target, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+def mixer_init(key, cfg, block, dtype) -> dict:
+    if block.mixer in ("gqa", "swa"):
+        return attn.gqa_init(key, cfg, dtype)
+    if block.mixer == "mla":
+        return attn.mla_init(key, cfg, dtype)
+    if block.mixer == "mamba2":
+        return ssm.mamba2_init(key, cfg, dtype)
+    if block.mixer == "rwkv6":
+        return ssm.rwkv6_init(key, cfg, dtype)
+    raise ValueError(block.mixer)
+
+
+def block_init(key, cfg, block, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: dict = {"norm1": rmsnorm_init(cfg.d_model)}
+    if not block.shared_attn:
+        p["mixer"] = mixer_init(k1, cfg, block, dtype)
+    if block.mlp == "dense":
+        p["norm2"] = rmsnorm_init(cfg.d_model)
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_gated, dtype)
+    elif block.mlp == "moe":
+        p["norm2"] = rmsnorm_init(cfg.d_model)
+        p["moe"] = moe_mod.moe_init(k3, cfg, dtype)
+    return p
+
+
+def _apply_mixer(mp: dict, cfg, block, h: Array, chunk: int) -> Array:
+    if block.mixer in ("gqa", "swa"):
+        return attn.gqa_apply(mp, cfg, h, window=block.window, chunk=chunk)
+    if block.mixer == "mla":
+        return attn.mla_apply(mp, cfg, h, chunk=chunk)
+    if block.mixer == "mamba2":
+        return ssm.mamba2_apply(mp, cfg, h, chunk=min(64, chunk))
+    if block.mixer == "rwkv6":
+        return ssm.rwkv6_apply(mp, cfg, h, chunk=min(16, chunk))
+    raise ValueError(block.mixer)
+
+
+def block_apply(
+    p: dict, cfg, block, x: Array, *, shared_mixer: dict | None = None, chunk: int = 1024
+) -> tuple[Array, dict]:
+    aux: dict = {}
+    mp = shared_mixer if block.shared_attn else p["mixer"]
+    x = x + _apply_mixer(mp, cfg, block, rmsnorm(p["norm1"], x, cfg.norm_eps), chunk)
+    if block.mlp == "dense":
+        x = x + mlp_apply(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps))
+    elif block.mlp == "moe":
+        y, aux = moe_mod.moe_apply(p["moe"], cfg, rmsnorm(p["norm2"], x, cfg.norm_eps))
+        x = x + y
+    return x, aux
+
+
+# -- decode ------------------------------------------------------------------
+def block_init_cache(cfg, block, batch: int, max_len: int, dtype) -> dict:
+    if block.mixer in ("gqa", "swa"):
+        return attn.gqa_init_cache(cfg, batch, max_len, block.window, dtype)
+    if block.mixer == "mla":
+        return attn.mla_init_cache(cfg, batch, max_len, dtype)
+    if block.mixer == "mamba2":
+        return ssm.mamba2_init_cache(cfg, batch, dtype)
+    if block.mixer == "rwkv6":
+        return ssm.rwkv6_init_cache(cfg, batch, dtype)
+    raise ValueError(block.mixer)
+
+
+def block_decode(
+    p: dict,
+    cfg,
+    block,
+    x: Array,
+    cache: dict,
+    length: Array,
+    *,
+    shared_mixer: dict | None = None,
+) -> tuple[Array, dict, dict]:
+    aux: dict = {}
+    mp = shared_mixer if block.shared_attn else p["mixer"]
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if block.mixer in ("gqa", "swa"):
+        y, cache = attn.gqa_decode(mp, cfg, h, cache, length, window=block.window)
+    elif block.mixer == "mla":
+        y, cache = attn.mla_decode(mp, cfg, h, cache, length)
+    elif block.mixer == "mamba2":
+        y, cache = ssm.mamba2_decode(mp, cfg, h, cache, length)
+    elif block.mixer == "rwkv6":
+        y, cache = ssm.rwkv6_decode(mp, cfg, h, cache, length)
+    else:
+        raise ValueError(block.mixer)
+    x = x + y
+    if block.mlp == "dense":
+        x = x + mlp_apply(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps))
+    elif block.mlp == "moe":
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        B = h2.shape[0]
+        y2, aux = moe_mod.moe_apply(p["moe"], cfg, h2.reshape(1, B, -1))
+        x = x + y2.reshape(B, 1, -1)
+    return x, cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack
+# ---------------------------------------------------------------------------
+def stack_init(key, cfg, dtype) -> dict:
+    keys = iter(jax.random.split(key, cfg.n_layers + 8))
+    p: dict = {"prefix": [], "suffix": [], "groups": None, "shared_attn": None}
+    if any(b.shared_attn for b in cfg.blocks):
+        shared_block = next(b for b in cfg.blocks if b.shared_attn)
+        p["shared_attn"] = mixer_init(next(keys), cfg, shared_block, dtype)
+    for b in cfg.prefix:
+        p["prefix"].append(block_init(next(keys), cfg, b, dtype))
+    if cfg.n_pattern_repeats:
+        per_group = []
+        for _ in range(cfg.n_pattern_repeats):
+            per_group.append(
+                tuple(block_init(next(keys), cfg, b, dtype) for b in cfg.pattern)
+            )
+        p["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+    for b in cfg.suffix:
+        p["suffix"].append(block_init(next(keys), cfg, b, dtype))
+    return p
+
+
+def _sum_aux(auxes: list[dict]) -> dict:
+    out: dict = {}
+    for a in auxes:
+        for k, v in a.items():
+            out[k] = out.get(k, 0.0) + v
+    return out
+
+
+def stack_apply(p: dict, cfg, x: Array, *, chunk: int = 1024) -> tuple[Array, dict]:
+    auxes = []
+    shared = p["shared_attn"]
+
+    def unscanned(bp, b, x):
+        def one(bp, x):
+            return block_apply(bp, cfg, b, x, shared_mixer=shared, chunk=chunk)
+
+        x = hints.constrain_activation(x)  # checkpoint saves it sharded
+        return (jax.checkpoint(one) if cfg.remat else one)(bp, x)
+
+    for bp, b in zip(p["prefix"], cfg.prefix):
+        x, a = unscanned(bp, b, x)
+        auxes.append(a)
+    if cfg.n_pattern_repeats:
+
+        def body(carry, gparams):
+            # the scan carry is what remat saves per group: keep it sharded
+            h = hints.constrain_activation(carry)
+            gaux = {}
+            for i, b in enumerate(cfg.pattern):
+                h, a = block_apply(gparams[i], cfg, b, h, shared_mixer=shared, chunk=chunk)
+                gaux = _sum_aux([gaux, a])
+            h = hints.constrain_activation(h)
+            # scan ys must be a fixed pytree; normalize to float32 leaves
+            gaux = {k: jnp.asarray(v, jnp.float32) for k, v in gaux.items()}
+            return h, gaux
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, group_aux = jax.lax.scan(body, x, p["groups"])
+        auxes.append({k: v.sum() for k, v in group_aux.items()})
+    for bp, b in zip(p["suffix"], cfg.suffix):
+        x, a = unscanned(bp, b, x)
+        auxes.append(a)
+    return x, _sum_aux(auxes)
+
+
+def stack_init_cache(cfg, batch: int, max_len: int, dtype) -> dict:
+    c: dict = {"prefix": [], "suffix": [], "groups": None}
+    for b in cfg.prefix:
+        c["prefix"].append(block_init_cache(cfg, b, batch, max_len, dtype))
+    if cfg.n_pattern_repeats:
+        per_group = []
+        for _ in range(cfg.n_pattern_repeats):
+            per_group.append(
+                tuple(block_init_cache(cfg, b, batch, max_len, dtype) for b in cfg.pattern)
+            )
+        c["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+    for b in cfg.suffix:
+        c["suffix"].append(block_init_cache(cfg, b, batch, max_len, dtype))
+    return c
+
+
+def stack_decode(
+    p: dict, cfg, x: Array, cache: dict, length: Array
+) -> tuple[Array, dict]:
+    shared = p["shared_attn"]
+    new_cache: dict = {"prefix": [], "suffix": [], "groups": None}
+    for bp, b, bc in zip(p["prefix"], cfg.prefix, cache["prefix"]):
+        x, nc, _ = block_decode(bp, cfg, b, x, bc, length, shared_mixer=shared)
+        new_cache["prefix"].append(nc)
+    if cfg.n_pattern_repeats:
+
+        def body(carry, xs):
+            h = carry
+            gparams, gcache = xs
+            ncs = []
+            for i, b in enumerate(cfg.pattern):
+                h, nc, _ = block_decode(
+                    gparams[i], cfg, b, h, gcache[i], length, shared_mixer=shared
+                )
+                ncs.append(nc)
+            return h, tuple(ncs)
+
+        x, new_groups = jax.lax.scan(body, x, (p["groups"], cache["groups"]))
+        new_cache["groups"] = new_groups
+    for bp, b, bc in zip(p["suffix"], cfg.suffix, cache["suffix"]):
+        x, nc, _ = block_decode(bp, cfg, b, x, bc, length, shared_mixer=shared)
+        new_cache["suffix"].append(nc)
+    return x, new_cache

@@ -1,0 +1,163 @@
+"""AdamW in raw JAX, designed for sharded large-scale training:
+
+  * moments inherit the parameter PartitionSpec (ZeRO-1: optimizer state is
+    as sharded as the parameters themselves — no replication);
+  * configurable moment dtype (``bfloat16`` for the 671B config so the
+    512-chip dry-run fits v5e HBM, fp32 elsewhere);
+  * global-norm gradient clipping and decoupled weight decay;
+  * warmup + cosine schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    # Adafactor-style rank-1 factored second moment over the last two dims —
+    # drops v from O(params) to O(rows+cols). The 671B config needs this on
+    # a single v5e pod: full AdamW state (6 B/param even at bf16 moments) is
+    # 671e9*6/256 = 15.7 GB/chip, leaving nothing for activations.
+    factored_second_moment: bool = False
+
+
+def schedule(cfg: AdamWConfig, step: Array) -> Array:
+    """Linear warmup then cosine decay to ``min_lr_frac * lr``."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    progress = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def _factorable(p) -> bool:
+    return p.ndim >= 2
+
+
+def init_state(cfg: AdamWConfig, params) -> dict:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    if not cfg.factored_second_moment:
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+    # factored: v_r has the column dim reduced away, v_c the row dim; 1-D
+    # leaves keep a full v in v_r (v_c is a zero-size stub).
+    v_r = jax.tree.map(
+        lambda p: jnp.zeros(p.shape[:-1], jnp.float32) if _factorable(p) else jnp.zeros(p.shape, jnp.float32),
+        params,
+    )
+    v_c = jax.tree.map(
+        lambda p: jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        if _factorable(p)
+        else jnp.zeros((0,), jnp.float32),
+        params,
+    )
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v_r": v_r,
+        "v_c": v_c,
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def _decayable(path) -> bool:
+    """Decay matrices only — norms/scales/biases (1-D leaves) are exempt."""
+    return True  # resolved per-leaf by ndim below
+
+
+class _Out:  # deliberately NOT a pytree: survives tree.map as a leaf
+    __slots__ = ("p", "m", "v", "c")
+
+    def __init__(self, p, m, v, c=None):
+        self.p, self.m, self.v, self.c = p, m, v, c
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state) -> tuple[dict, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def finish(p, g, m, vh):
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        delta = (m_new / bc1) / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new.astype(mdt)
+
+    if not cfg.factored_second_moment:
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            p_new, m_new = finish(p, g, m, v_new / bc2)
+            return _Out(p_new, m_new, v_new.astype(mdt))
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_state = {
+            "m": jax.tree.map(lambda t: t.m, out),
+            "v": jax.tree.map(lambda t: t.v, out),
+            "step": step,
+        }
+    else:
+
+        def upd(p, g, m, vr, vc):
+            g = g.astype(jnp.float32) * scale
+            g2 = g * g + 1e-30
+            if p.ndim >= 2:
+                vr_new = b2 * vr + (1 - b2) * g2.mean(axis=-1)
+                vc_new = b2 * vc + (1 - b2) * g2.mean(axis=-2)
+                denom = jnp.maximum(vr_new.mean(axis=-1, keepdims=True), 1e-30)
+                vh = (vr_new[..., None] * vc_new[..., None, :]) / denom[..., None]
+            else:
+                vr_new = b2 * vr + (1 - b2) * g2
+                vc_new = vc
+                vh = vr_new
+            p_new, m_new = finish(p, g, m, vh / bc2)
+            return _Out(p_new, m_new, vr_new, vc_new)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v_r"], state["v_c"])
+        new_state = {
+            "m": jax.tree.map(lambda t: t.m, out),
+            "v_r": jax.tree.map(lambda t: t.v, out),
+            "v_c": jax.tree.map(lambda t: t.c, out),
+            "step": step,
+        }
+    new_params = jax.tree.map(lambda t: t.p, out)
+    metrics = {"grad_norm": gnorm, "lr": lr, "clip_scale": scale}
+    return new_params, new_state, metrics

@@ -1,0 +1,150 @@
+"""Continuous-batching serving engine.
+
+Slot-based scheduler over the model's per-sequence-length decode step:
+requests are admitted into free slots, prefilling writes their prompt into
+the slot's cache region (teacher-forced decode steps — prefill fusion into
+one forward is an optimization the hillclimb log discusses), and every
+engine tick advances *all* active slots by one token. Finished sequences
+free their slot immediately (no head-of-line blocking).
+
+ENTS integration: an ``EngineCluster`` (examples/serve_cluster.py) registers
+one engine per pod-slice as an ENTS "edge node"; the ENTS online scheduler
+(core/online.py) decides which engine serves which request stream and how
+inter-engine flows share ICI/DCN links.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import decode_step, init_cache
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Request | None = None
+    prefill_left: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def free(self) -> bool:
+        return self.request is None
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg,
+        params,
+        *,
+        slots: int = 8,
+        max_len: int = 512,
+        greedy: bool = True,
+    ) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.slots = [_Slot() for _ in range(slots)]
+        self.queue: deque[Request] = deque()
+        self.cache = init_cache(cfg, slots, max_len)
+        self.greedy = greedy
+        self._step = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t))
+        self._finished: list[Request] = []
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError("request exceeds engine max_len")
+        self.queue.append(req)
+
+    def run_until_drained(self, max_ticks: int = 100_000) -> list[Request]:
+        for _ in range(max_ticks):
+            if not self.tick():
+                break
+        return self._finished
+
+    @property
+    def active(self) -> int:
+        return sum(0 if s.free else 1 for s in self.slots)
+
+    # -- engine loop ----------------------------------------------------------
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot.free and self.queue:
+                req = self.queue.popleft()
+                slot.request = req
+                slot.prefill_left = list(req.prompt)
+                # reset this slot's cache region: zero length is sufficient
+                # (stale K/V beyond `length` is masked out)
+                self.cache["length"] = self.cache["length"].at[i].set(0)
+                self._reset_recurrent_state(i)
+
+    def _reset_recurrent_state(self, slot: int) -> None:
+        """SSM states aren't length-masked (they're running sums), so zero
+        them when a slot is recycled. Cache layout is deterministic: leaves
+        under ``groups`` are group-stacked (G, B, ...); prefix/suffix leaves
+        are (B, ...)."""
+
+        def fix(path, leaf):
+            names = [str(getattr(p, "key", "")) for p in path]
+            if not any(n in ("ssm", "wkv", "conv", "x_prev") for n in names):
+                return leaf  # k/v caches are length-masked; no reset needed
+            batch_ax = 1 if "groups" in names else 0
+            idx = tuple(slice(None) if a != batch_ax else slot for a in range(leaf.ndim))
+            return leaf.at[idx].set(0)
+
+        flat = jax.tree_util.tree_flatten_with_path(self.cache["blocks"])
+        leaves = [fix(p, l) for p, l in flat[0]]
+        self.cache["blocks"] = jax.tree_util.tree_unflatten(flat[1], leaves)
+
+    def tick(self) -> bool:
+        """One engine step: admit, build the token batch (prefill tokens for
+        prefilling slots, last sampled token otherwise), decode, harvest."""
+        self._admit()
+        if all(s.free for s in self.slots) and not self.queue:
+            return False
+        tokens = np.zeros((len(self.slots), 1), np.int32)
+        live = np.zeros(len(self.slots), bool)
+        for i, slot in enumerate(self.slots):
+            if slot.free:
+                continue
+            live[i] = True
+            if slot.prefill_left:
+                tokens[i, 0] = slot.prefill_left.pop(0)
+            elif slot.request.output:
+                tokens[i, 0] = slot.request.output[-1]
+            else:
+                tokens[i, 0] = slot.request.prompt[-1]
+        logits, new_cache = self._step(self.params, self.cache, jnp.asarray(tokens))
+        # freeze cache lengths for dead slots (masking correctness)
+        new_cache["length"] = jnp.where(
+            jnp.asarray(live), new_cache["length"], self.cache["length"]
+        )
+        self.cache = new_cache
+        next_tokens = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for i, slot in enumerate(self.slots):
+            if slot.free or slot.prefill_left:
+                continue  # still prefilling: ignore logits
+            req = slot.request
+            req.output.append(int(next_tokens[i]))
+            total = int(self.cache["length"][i])
+            if len(req.output) >= req.max_new_tokens or total >= self.max_len - 1:
+                req.done = True
+                self._finished.append(req)
+                slot.request = None
+        return True

@@ -1,0 +1,128 @@
+"""Fault tolerance for multi-pod runs: failure detection, elastic re-mesh,
+checkpoint resharding, and straggler mitigation policy.
+
+On real clusters the signals come from the coordination service; here the
+mechanisms are implemented against a simulated host set so the logic (which
+is the hard part to get right) is testable on CPU:
+
+  * ``HeartbeatMonitor`` — declares hosts dead after ``timeout`` missed
+    beats.
+  * ``plan_elastic_remesh`` — given surviving chip count, pick the largest
+    feasible (data, model) mesh that preserves the model-parallel degree
+    (weights reshard over fewer data shards; model sharding is unchanged, so
+    only the FSDP axis regathers — the cheap direction).
+  * ``reshard_like`` — restore a checkpoint into a differently-sharded (but
+    same-logical-shape) state: logical shapes are mesh-independent in this
+    codebase, so resharding is a device_put with new shardings.
+  * Straggler policy: at the *job* level ENTS itself re-routes flows away
+    from congested links (core/online.py OTFA); within a step the train
+    loop drops to ``grad-skip`` mode — see ``StragglerPolicy``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+
+__all__ = [
+    "HeartbeatMonitor",
+    "plan_elastic_remesh",
+    "reshard_like",
+    "StragglerPolicy",
+]
+
+
+class HeartbeatMonitor:
+    """Tracks last-seen times per host; ``dead(now)`` lists failures."""
+
+    def __init__(self, hosts: list[str], timeout: float = 60.0) -> None:
+        self.timeout = timeout
+        self.last_seen = {h: 0.0 for h in hosts}
+
+    def beat(self, host: str, now: float) -> None:
+        if host in self.last_seen:
+            self.last_seen[host] = now
+
+    def dead(self, now: float) -> list[str]:
+        return [h for h, t in self.last_seen.items() if now - t > self.timeout]
+
+    def alive(self, now: float) -> list[str]:
+        return [h for h, t in self.last_seen.items() if now - t <= self.timeout]
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    data: int
+    model: int
+    pods: int
+    dropped_chips: int  # surviving chips that don't fit the new rectangle
+
+    @property
+    def chips(self) -> int:
+        return self.pods * self.data * self.model
+
+
+def plan_elastic_remesh(
+    surviving_chips: int,
+    *,
+    model_parallel: int = 16,
+    chips_per_pod: int = 256,
+    min_data: int = 1,
+) -> RemeshPlan:
+    """Largest (pod, data, model) rectangle inside the surviving chip set
+    that preserves the model-parallel degree. Preserving `model` means the
+    per-chip weight shards are unchanged — restart only re-slices the batch
+    (data axis), so recovery = checkpoint restore + data re-shard, no weight
+    redistribution across the model axis."""
+    if surviving_chips < model_parallel * min_data:
+        raise ValueError(
+            f"cannot build a mesh: {surviving_chips} chips < "
+            f"{model_parallel}x{min_data} minimum"
+        )
+    pods = max(1, surviving_chips // chips_per_pod)
+    while pods > 1:
+        per_pod = surviving_chips // pods
+        if per_pod >= model_parallel * min_data:
+            break
+        pods -= 1
+    per_pod = surviving_chips // pods
+    data = per_pod // model_parallel
+    # data axis must stay a power of two for clean batch resharding
+    data = 2 ** int(math.log2(data)) if data else 0
+    used = pods * data * model_parallel
+    return RemeshPlan(data=data, model=model_parallel, pods=pods, dropped_chips=surviving_chips - used)
+
+
+def reshard_like(tree, shardings):
+    """Move a (restored) pytree onto new shardings — elastic restart's final
+    step. Logical shapes are mesh-independent, so this is a device_put."""
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Within-job straggler mitigation: if a data shard misses the step
+    deadline ``patience`` times in a row, its contribution is skipped (the
+    gradient is rescaled by the participating fraction — bounded-staleness
+    synchronous training a la Bulk-Sync-with-backup-workers)."""
+
+    patience: int = 3
+    min_participation: float = 0.75
+    _strikes: dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def observe(self, shard: int, late: bool) -> None:
+        self._strikes[shard] = self._strikes.get(shard, 0) + 1 if late else 0
+
+    def skip_set(self) -> set[int]:
+        return {s for s, k in self._strikes.items() if k >= self.patience}
+
+    def grad_scale(self, n_shards: int) -> float:
+        participating = n_shards - len(self.skip_set())
+        frac = participating / n_shards
+        if frac < self.min_participation:
+            raise RuntimeError(
+                f"participation {frac:.2f} below floor "
+                f"{self.min_participation}: trigger elastic re-mesh instead"
+            )
+        return 1.0 / frac

@@ -1,0 +1,109 @@
+"""The train step: forward + CE (+aux), backward, clip, AdamW — with
+optional gradient accumulation (microbatching) and an optional MTP head.
+
+``make_train_step(cfg, opt_cfg)`` returns a pure function
+``train_step(state, batch) -> (state, metrics)`` that pjit shards via the
+PartitionSpecs from ``launch/mesh.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..models import forward
+from ..models.layers import dense_init
+from ..optim import AdamWConfig, apply_updates, init_state
+from .losses import total_loss
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1  # grad accumulation steps per train step
+    mtp_weight: float = 0.0
+    moe_balance_weight: float = 0.01
+
+
+def init_train_state(cfg, opt_cfg: AdamWConfig, key, *, train_cfg: TrainConfig | None = None):
+    from ..models import init_params
+
+    train_cfg = train_cfg or TrainConfig()
+    params = init_params(cfg, key)
+    if train_cfg.mtp_weight > 0.0:
+        params["mtp_proj"] = dense_init(
+            jax.random.fold_in(key, 7), cfg.d_model, cfg.d_model, jnp.dtype(cfg.dtype)
+        )
+    return {"params": params, "opt": init_state(opt_cfg, params), "step": jnp.zeros((), jnp.int32)}
+
+
+def _loss_fn(params, cfg, train_cfg: TrainConfig, batch):
+    want_mtp = train_cfg.mtp_weight > 0.0 and "mtp_proj" in params
+    logits, aux = forward(
+        params, cfg, batch["tokens"], batch.get("frontend_embeds"), return_hidden=want_mtp
+    )
+    mtp_logits = None
+    if want_mtp:
+        # cheap MTP head (DeepSeek-V3 flavor): project the final hidden state
+        # and unembed it to predict token t+2 (full MTP transformer block is
+        # future work — DESIGN.md)
+        from ..models.layers import unembed_apply
+
+        table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        mtp_logits = unembed_apply(table, aux.pop("hidden") @ params["mtp_proj"])
+    loss, metrics = total_loss(
+        logits,
+        batch["labels"],
+        aux,
+        moe_balance_weight=train_cfg.moe_balance_weight,
+        mtp_logits=mtp_logits,
+        mtp_weight=train_cfg.mtp_weight,
+    )
+    return loss, metrics
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, train_cfg: TrainConfig | None = None):
+    train_cfg = train_cfg or TrainConfig()
+
+    def train_step(state, batch):
+        params = state["params"]
+        if train_cfg.microbatches > 1:
+            n = train_cfg.microbatches
+
+            def split(x):
+                return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                g_acc, m_acc = carry
+                (loss, metrics), g = jax.value_and_grad(_loss_fn, has_aux=True)(
+                    params, cfg, train_cfg, mb
+                )
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / n, g_acc, g
+                )
+                m_acc = jax.tree.map(lambda a, b: a + b / n, m_acc, metrics)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            m0 = {"loss": 0.0, "ce": 0.0}
+            # metrics pytree must be static: run one microbatch to get keys
+            (_, metrics0), _ = jax.value_and_grad(_loss_fn, has_aux=True)(
+                params, cfg, train_cfg, jax.tree.map(lambda x: x[0], micro)
+            )
+            m0 = jax.tree.map(lambda _: jnp.zeros((), jnp.float32), metrics0)
+            (grads, metrics), _ = jax.lax.scan(acc_fn, (g0, m0), micro)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(_loss_fn, has_aux=True)(
+                params, cfg, train_cfg, batch
+            )
+        new_params, new_opt, opt_metrics = apply_updates(opt_cfg, params, grads, state["opt"])
+        metrics = {**metrics, **opt_metrics}
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,95 @@
+"""Mesh-free dry-run units: the HLO collective parser and input_specs.
+
+(The full 512-device lower+compile paths run via ``launch/dryrun.py`` — see
+EXPERIMENTS.md §Dry-run; these tests cover the host-side logic.)
+"""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import CELLS, SUBQUADRATIC, all_cells, applicable
+from repro.launch.dryrun import collective_bytes, input_specs
+
+FAKE_HLO = """
+HloModule jit_train_step
+  %p = bf16[16,448]{1,0} parameter(0)
+  %ag = bf16[16,7168]{1,0} all-gather(bf16[16,448]{1,0} %p), replica_groups={...}
+  %ar = f32[256,1024]{1,0} all-reduce(f32[256,1024]{1,0} %x), to_apply=%add
+  %ars = f32[8,8]{1,0} all-reduce-start(f32[8,8]{1,0} %y), to_apply=%add
+  %ard = f32[8,8]{1,0} all-reduce-done(f32[8,8]{1,0} %ars)
+  %rs = bf16[2,512]{1,0} reduce-scatter(bf16[2,8192]{1,0} %z), dimensions={1}
+  %a2a = f32[4,16]{1,0} all-to-all(f32[4,16]{1,0} %w), dimensions={0}
+  %cp = u32[128]{0} collective-permute(u32[128]{0} %v), source_target_pairs={...}
+  %dot = f32[16,16]{1,0} dot(f32[16,448], f32[448,16])
+"""
+
+
+class TestCollectiveParser:
+    def test_counts_and_bytes(self):
+        out = collective_bytes(FAKE_HLO)
+        assert out["counts"]["all-gather"] == 1
+        assert out["all-gather"] == 16 * 7168 * 2
+        # -start counted once, -done skipped
+        assert out["counts"]["all-reduce"] == 2
+        assert out["all-reduce"] == 256 * 1024 * 4 + 8 * 8 * 4
+        assert out["reduce-scatter"] == 2 * 512 * 2
+        assert out["all-to-all"] == 4 * 16 * 4
+        assert out["collective-permute"] == 128 * 4
+        assert out["total"] == sum(
+            out[k]
+            for k in (
+                "all-reduce",
+                "all-gather",
+                "reduce-scatter",
+                "all-to-all",
+                "collective-permute",
+            )
+        )
+
+    def test_ignores_non_collectives(self):
+        out = collective_bytes("%dot = f32[64,64] dot(f32[64,8], f32[8,64])")
+        assert out["total"] == 0
+
+
+class TestCellMatrix:
+    def test_40_assigned_cells(self):
+        """10 archs x 4 shapes = 40 assigned cells; long_500k applies only to
+        the 3 sub-quadratic archs => 33 runnable, 7 documented skips."""
+        assert len(ARCH_IDS) * len(CELLS) == 40
+        runnable = all_cells(ARCH_IDS)
+        assert len(runnable) == 33
+        skipped = [
+            (a, "long_500k") for a in ARCH_IDS if not applicable(a, "long_500k")
+        ]
+        assert len(skipped) == 7
+        assert all(a not in SUBQUADRATIC for a, _ in skipped)
+
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_train_input_specs(self, arch):
+        cfg = get_config(arch)
+        ins = input_specs(arch, "train_4k")
+        expect_s = 4096 - (cfg.frontend_tokens if cfg.frontend else 0)
+        assert ins["tokens"].shape == (256, expect_s)
+        assert ins["labels"].shape == (256, expect_s)
+        if cfg.frontend:
+            assert ins["frontend_embeds"].shape == (256, cfg.frontend_tokens, cfg.d_model)
+
+    @pytest.mark.parametrize("arch", ["internlm2-1.8b", "rwkv6-3b", "deepseek-v2-lite-16b"])
+    def test_decode_input_specs_have_cache(self, arch):
+        ins = input_specs(arch, "decode_32k")
+        assert ins["tokens"].shape == (128, 1)
+        assert ins["cache"]["length"].shape == (128,)
+        leaves = [l for l in __import__("jax").tree.leaves(ins["cache"])]
+        assert leaves, "cache must have state"
+
+    def test_long_500k_cache_scales(self):
+        ins = input_specs("gemma3-1b", "long_500k")
+        import jax
+
+        # sliding-window layers cache only `window` slots; globals the full S
+        sizes = {l.shape[2] for l in jax.tree.leaves(ins["cache"]) if l.ndim == 5}
+        assert 512 in sizes and 524288 in sizes
+
+    def test_decode_tokens_dtype(self):
+        ins = input_specs("musicgen-medium", "decode_32k")
+        assert ins["tokens"].dtype == jnp.int32

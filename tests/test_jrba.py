@@ -1,0 +1,123 @@
+"""JRBA (Algorithm 2) correctness: against brute-force optimum, LP bounds,
+Eq. 15 feasibility, and the water-filling dominance property."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Flow,
+    brute_force_span,
+    build_program,
+    jrba,
+    random_edge_network,
+    solve_relaxation,
+    water_fill,
+)
+from repro.core.jrba import _eq15_bandwidth
+from repro.core.paths import path_links
+
+
+def _random_instance(seed: int, n_nodes: int = 8, n_flows: int = 4):
+    rng = np.random.RandomState(seed)
+    net = random_edge_network(n_nodes, mean_bandwidth=5.0, rng=rng)
+    flows = []
+    for i in range(n_flows):
+        u, v = rng.choice(n_nodes, size=2, replace=False)
+        flows.append(Flow(int(u), int(v), float(rng.uniform(0.5, 4.0)), job_id=i))
+    return net, flows
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_jrba_close_to_brute_force(seed):
+    net, flows = _random_instance(seed)
+    prog = build_program(net, flows, k=3)
+    best = brute_force_span(prog)
+    res = jrba(net, flows, k=3)
+    assert res.span >= best - 1e-6  # cannot beat the optimum
+    assert res.span <= best * 1.20 + 1e-9  # rounding stays near-optimal
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_relaxation_lower_bounds_integral_optimum(seed):
+    """LP relax optimum <= integral optimum; our MD solution upper-bounds the
+    LP optimum, so it must come within tolerance of the integral optimum."""
+    net, flows = _random_instance(seed, n_flows=3)
+    prog = build_program(net, flows, k=3)
+    best = brute_force_span(prog)
+    _, relaxed = solve_relaxation(prog, n_iters=600)
+    assert relaxed <= best * 1.05 + 1e-6
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_eq15_feasible_and_waterfill_dominates(seed):
+    net, flows = _random_instance(seed, n_flows=5)
+    res = jrba(net, flows, k=3)
+    prog = build_program(net, flows, k=3)
+    # reconstruct selected usage from routes
+    sel = np.zeros((len(res.flows), len(net.links)), dtype=np.float32)
+    for i, route in enumerate(res.routes):
+        for l in path_links(net, route):
+            sel[i, l] = 1.0
+    vols = np.array([f.volume for f in res.flows], dtype=np.float32)
+    # Eq. 15 must respect link capacities (Eq. 7)
+    load = sel.T @ res.bandwidth
+    assert np.all(load <= net.capacity + 1e-6)
+    # water-fill must respect capacities and weakly dominate Eq. 15 per flow
+    wf = water_fill(sel, vols, net.capacity)
+    assert np.all(sel.T @ wf <= net.capacity + 1e-5)
+    assert np.all(wf >= _eq15_bandwidth(sel, vols, net.capacity) - 1e-6)
+    # and cannot worsen the span
+    span_wf = np.max(vols / np.maximum(wf, 1e-12))
+    assert span_wf <= res.span + 1e-6
+
+
+def test_waterfill_leaves_no_useful_residual():
+    """After water-filling, every flow crosses at least one saturated link
+    (max-min fairness certificate)."""
+    net, flows = _random_instance(3, n_flows=6)
+    res = jrba(net, flows, k=3, water_filling=True)
+    sel = np.zeros((len(res.flows), len(net.links)))
+    for i, route in enumerate(res.routes):
+        for l in path_links(net, route):
+            sel[i, l] = 1.0
+    residual = net.capacity - sel.T @ res.bandwidth
+    for i in range(len(res.flows)):
+        links = np.flatnonzero(sel[i])
+        assert residual[links].min() <= 1e-6 * max(net.capacity.max(), 1.0)
+
+
+def test_single_flow_gets_bottleneck_bandwidth():
+    net, flows = _random_instance(0, n_flows=1)
+    res = jrba(net, flows, k=4)
+    bw_min = min(net.capacity[l] for l in path_links(net, res.routes[0]))
+    assert res.bandwidth[0] == pytest.approx(bw_min)
+
+
+def test_colocated_flows_return_none():
+    net, _ = _random_instance(0)
+    assert jrba(net, [Flow(2, 2, 5.0)], k=3) is None
+    assert jrba(net, [], k=3) is None
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n_flows=st.integers(1, 5),
+    k=st.integers(1, 4),
+)
+def test_jrba_invariants_property(seed, n_flows, k):
+    """Property: for any instance — capacities respected, spans consistent,
+    every route actually connects its flow's endpoints."""
+    net, flows = _random_instance(seed, n_flows=n_flows)
+    res = jrba(net, flows, k=k)
+    assert res is not None
+    assert np.all(res.bandwidth > 0)
+    load = np.zeros(len(net.links))
+    for route, b, f in zip(res.routes, res.bandwidth, res.flows):
+        assert route[0] == f.src and route[-1] == f.dst
+        assert len(set(route)) == len(route)  # loopless
+        for l in path_links(net, route):
+            load[l] += b
+    assert np.all(load <= net.capacity * (1 + 1e-6))
+    spans = [f.volume / b for f, b in zip(res.flows, res.bandwidth)]
+    assert res.span == pytest.approx(max(spans))

@@ -1,0 +1,195 @@
+"""Pallas kernel validation: interpret=True vs pure-jnp oracles, swept over
+shapes/dtypes, plus hypothesis property tests. Tolerances follow the
+taxonomy guidance: fp32 ~1e-5, bf16 >= 1e-2 relative on long reductions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def tol(dtype):
+    # chunked-vs-sequential reassociation noise: ~1e-4 abs on O(100) values
+    # in fp32 (measured; the model-side chunked jnp form shows the same)
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=5e-4)
+
+
+def assert_close(a, b, dtype):
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32), **tol(dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+ATTN_CASES = [
+    # (B, S, H, KH, D, window, bq, bk)
+    (1, 128, 4, 4, 64, 0, 64, 64),  # MHA
+    (2, 256, 8, 2, 64, 0, 128, 64),  # GQA 4:1
+    (1, 256, 4, 1, 128, 0, 64, 128),  # MQA, wide head
+    (2, 256, 4, 2, 64, 96, 64, 64),  # sliding window
+    (1, 512, 2, 2, 32, 128, 128, 128),  # window == block
+    (1, 128, 2, 2, 96, 0, 128, 128),  # single block pair
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    B, S, H, KH, D, window, bq, bk = case
+    ks = jax.random.split(jax.random.PRNGKey(hash(case) % 2**31), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, KH, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, KH, D), dtype)
+    out = ops.flash_attention(
+        q, k, v, causal=True, window=window, block_q=bq, block_k=bk, interpret=True
+    )
+    expect = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=True,
+        window=window,
+    ).transpose(0, 2, 1, 3)
+    assert out.dtype == dtype
+    assert_close(out, expect, dtype)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s_blocks=st.integers(1, 4),
+    h=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2]),
+    d=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_attention_property(s_blocks, h, g, d, seed):
+    B, bq = 1, 64
+    S = s_blocks * bq
+    H, KH = h * g, h
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, H, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KH, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KH, d), jnp.float32)
+    out = ops.flash_attention(q, k, v, block_q=bq, block_k=bq, interpret=True)
+    expect = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+    ).transpose(0, 2, 1, 3)
+    assert_close(out, expect, jnp.float32)
+    # row-stochastic sanity: attention output is a convex combination of V
+    assert float(jnp.abs(out).max()) <= float(jnp.abs(v).max()) * (1 + 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD
+# ---------------------------------------------------------------------------
+SSD_CASES = [
+    # (B, S, H, P, N, chunk)
+    (2, 128, 2, 16, 8, 32),
+    (1, 256, 4, 64, 64, 64),
+    (2, 64, 1, 32, 16, 64),  # single chunk
+    (1, 512, 2, 64, 32, 128),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_matches_sequential(case, dtype):
+    B, S, H, P, N, chunk = case
+    ks = jax.random.split(jax.random.PRNGKey(hash(case) % 2**31), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)) - 1.0).astype(jnp.float32)
+    A = -jnp.exp(jax.random.uniform(ks[2], (H,), minval=0.0, maxval=2.0))
+    Bm = jax.random.normal(ks[3], (B, S, N), dtype)
+    Cm = jax.random.normal(ks[4], (B, S, N), dtype)
+    out = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    expect = ref.ssd_scan_ref(
+        x.transpose(0, 2, 1, 3), dt.transpose(0, 2, 1), A, Bm, Cm
+    ).transpose(0, 2, 1, 3)
+    assert_close(out, expect, dtype)
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6
+# ---------------------------------------------------------------------------
+RWKV_CASES = [
+    # (B, S, H, P, chunk) — chunk <= 16: the chunk-start factorization is
+    # exact only while Q * |logw|_max stays inside fp32 exp range; the model
+    # clamps |logw| <= e (see models/ssm.py::_rwkv6_decay)
+    (2, 128, 2, 16, 16),
+    (1, 256, 4, 64, 16),
+    (2, 64, 1, 32, 8),
+    (1, 512, 2, 64, 16),
+]
+
+
+@pytest.mark.parametrize("case", RWKV_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_matches_sequential(case, dtype):
+    B, S, H, P, chunk = case
+    ks = jax.random.split(jax.random.PRNGKey(hash(case) % 2**31), 6)
+    r = (jax.random.normal(ks[0], (B, S, H, P)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, S, H, P)) * 0.5).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, H, P), dtype)
+    # decay drawn across the full *valid* model range logw in [-e, ~0)
+    logw = -jnp.exp(jax.random.uniform(ks[3], (B, S, H, P), minval=-8.0, maxval=1.0))
+    u = (jax.random.normal(ks[4], (H, P)) * 0.3).astype(jnp.float32)
+    out = ops.rwkv6_scan(r, k, v, logw.astype(jnp.float32), u, chunk=chunk, interpret=True)
+    t = lambda a: a.transpose(0, 2, 1, 3)
+    expect = ref.rwkv6_scan_ref(t(r), t(k), t(v), t(logw.astype(jnp.float32)), u)
+    assert_close(out, t(expect), dtype)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    chunks=st.integers(1, 4),
+    h=st.sampled_from([1, 2]),
+    p=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_rwkv6_property_strong_decay(chunks, h, p, seed):
+    """Property: at the model's decay clamp limit (|logw| = e, the strongest
+    trainable decay — a cliff profile that broke midpoint-normalized
+    factorizations) the chunked kernel still matches the sequential oracle."""
+    B, Q = 1, 16
+    S = chunks * Q
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    r = jax.random.normal(ks[0], (B, S, h, p))
+    k = jax.random.normal(ks[1], (B, S, h, p))
+    v = jax.random.normal(ks[2], (B, S, h, p))
+    u = jax.random.normal(ks[3], (h, p))
+    # half the channels at max decay, half nearly none: the cliff case
+    cliff = jnp.where(jnp.arange(p) < p // 2, -float(np.e), -1e-3)
+    logw = jnp.broadcast_to(cliff, (B, S, h, p)).astype(jnp.float32)
+    out = ops.rwkv6_scan(r, k, v, logw, u, chunk=Q, interpret=True)
+    t = lambda a: a.transpose(0, 2, 1, 3)
+    expect = ref.rwkv6_scan_ref(t(r), t(k), t(v), t(logw), u)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(t(expect)), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    chunks=st.integers(1, 3),
+    n=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_ssd_property_no_decay_cumsum(chunks, n, seed):
+    """Property: with A -> 0 (no decay) and C_t = B_t = const, the SSD scan
+    is a causal cumulative sum of dt_j * x_j * |B|^2."""
+    B, Q, H, P = 1, 32, 2, 8
+    S = chunks * Q
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = jnp.full((H,), -1e-9)
+    Bv = jnp.ones((B, S, n)) / np.sqrt(n)
+    out = ops.ssd_scan(x, dt, A, Bv, Bv, chunk=Q, interpret=True)
+    expect = jnp.cumsum(dt[..., None] * x, axis=1)  # |B|^2 = 1
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-4, atol=1e-4)

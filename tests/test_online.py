@@ -1,0 +1,93 @@
+"""Online scheduling (Algorithms 3/4): simulator invariants and the paper's
+qualitative results on small instances (full sweeps live in benchmarks/)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    OnlineScheduler,
+    poisson_arrivals,
+    random_edge_network,
+)
+
+
+def make_net(n=12, bw=1.0, seed=1):
+    return random_edge_network(
+        n,
+        mean_bandwidth=bw,
+        rng=np.random.RandomState(seed),
+        # plenty of memory so every policy can schedule (isolates networking)
+        mem_choices=(16.0, 16.0, 32.0, 64.0),
+    )
+
+
+def make_arrivals(n_jobs=8, n_nodes=12, seed=2):
+    return poisson_arrivals(n_jobs, n_nodes, np.random.RandomState(seed), total_units=10.0)
+
+
+@pytest.mark.parametrize("policy", ["LR", "BR", "TP", "OTFS", "OTFA", "OTFA+WF"])
+def test_all_jobs_finish(policy):
+    net = make_net()
+    sim = OnlineScheduler(net, policy, jrba_iters=150)
+    res = sim.run(make_arrivals())
+    assert res.unfinished == 0
+    assert all(r.finish_time >= r.schedule_time >= r.submit_time for r in res.records)
+    assert res.avg_throughput > 0
+
+
+def test_resources_fully_released():
+    net = make_net()
+    sim = OnlineScheduler(net, "OTFS", jrba_iters=100)
+    sim.run(make_arrivals())
+    np.testing.assert_allclose(net.mem_avail, net.mem_max)
+
+
+def test_partitioning_beats_whole_job_on_thin_links():
+    """Paper Fig. 11(a): with ~1 unit/s links, LR/BR throughput stays < 1
+    while the partitioning policies do much better."""
+    results = {}
+    for policy in ("LR", "TP", "OTFA"):
+        net = make_net(bw=1.0)
+        res = OnlineScheduler(net, policy, jrba_iters=150).run(make_arrivals())
+        results[policy] = res.avg_throughput
+    assert results["LR"] < 1.0
+    assert results["TP"] > results["LR"]
+    assert results["OTFA"] > results["LR"] * 1.4  # >= 43% of the paper's band
+
+
+def test_otfa_at_least_otfs():
+    spans = {}
+    for policy in ("OTFS", "OTFA"):
+        net = make_net(bw=1.0, n=16, seed=5)
+        res = OnlineScheduler(net, policy, jrba_iters=200).run(
+            make_arrivals(n_jobs=12, n_nodes=16, seed=7)
+        )
+        spans[policy] = res.avg_throughput
+    assert spans["OTFA"] >= spans["OTFS"] * 0.95  # allow solver noise, no regression
+
+
+def test_waterfill_weakly_improves_otfa():
+    tps = {}
+    for policy in ("OTFA", "OTFA+WF"):
+        net = make_net(bw=1.0, n=16, seed=3)
+        res = OnlineScheduler(net, policy, jrba_iters=200).run(
+            make_arrivals(n_jobs=12, n_nodes=16, seed=11)
+        )
+        tps[policy] = res.avg_throughput
+    assert tps["OTFA+WF"] >= tps["OTFA"] * 0.999
+
+
+def test_abundant_bandwidth_equalizes_policies():
+    """Paper Fig. 11(f): at high bandwidth the gap between baselines and
+    ENTS shrinks (compute becomes the bottleneck)."""
+    tps = {}
+    for policy in ("LR", "OTFA"):
+        net = make_net(bw=200.0)
+        res = OnlineScheduler(net, policy, jrba_iters=150).run(make_arrivals())
+        tps[policy] = res.avg_throughput
+    assert tps["OTFA"] <= tps["LR"] * 3.0  # far smaller gap than at bw=1
+
+def test_deterministic_given_seed():
+    a = OnlineScheduler(make_net(), "OTFA", jrba_iters=100).run(make_arrivals())
+    b = OnlineScheduler(make_net(), "OTFA", jrba_iters=100).run(make_arrivals())
+    assert [r.finish_time for r in a.records] == [r.finish_time for r in b.records]
+    assert a.avg_throughput == b.avg_throughput

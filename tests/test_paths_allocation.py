@@ -1,0 +1,135 @@
+"""Path enumeration (Yen) and Algorithm 1 / baseline allocators."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    JobGraph,
+    NetworkGraph,
+    Task,
+    allocate_greedy,
+    allocate_whole_job_br,
+    allocate_whole_job_lr,
+    dijkstra,
+    k_shortest_paths,
+    random_edge_network,
+    video_analytics_job,
+)
+
+
+def grid_net(n=3, bw=1.0):
+    links = []
+    for r in range(n):
+        for c in range(n):
+            u = r * n + c
+            if c + 1 < n:
+                links.append((u, u + 1, bw))
+            if r + 1 < n:
+                links.append((u, u + n, bw))
+    return NetworkGraph([10.0] * (n * n), [8.0] * (n * n), links)
+
+
+class TestPaths:
+    def test_dijkstra_shortest(self):
+        net = grid_net()
+        path = dijkstra(net, 0, 8)
+        assert path[0] == 0 and path[-1] == 8 and len(path) == 5  # 4 hops
+
+    def test_dijkstra_disconnected(self):
+        net = NetworkGraph([1, 1, 1], [1, 1, 1], [(0, 1, 1.0)])
+        assert dijkstra(net, 0, 2) is None
+
+    def test_k_shortest_sorted_unique_loopless(self):
+        net = grid_net()
+        paths = k_shortest_paths(net, 0, 8, 6)
+        assert 1 <= len(paths) <= 6
+        hops = [len(p) - 1 for p in paths]
+        assert hops == sorted(hops)
+        assert len({tuple(p) for p in paths}) == len(paths)
+        for p in paths:
+            assert len(set(p)) == len(p)
+            assert p[0] == 0 and p[-1] == 8
+
+    def test_k_shortest_exhausts_small_graph(self):
+        # triangle: exactly two loopless paths 0->1
+        net = NetworkGraph([1] * 3, [1] * 3, [(0, 1, 1.0), (1, 2, 1.0), (0, 2, 1.0)])
+        paths = k_shortest_paths(net, 0, 1, 10)
+        assert sorted(map(tuple, paths)) == [(0, 1), (0, 2, 1)]
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 1000), k=st.integers(1, 5))
+    def test_yen_property(self, seed, k):
+        rng = np.random.RandomState(seed)
+        net = random_edge_network(7, rng=rng)
+        u, v = rng.choice(7, 2, replace=False)
+        paths = k_shortest_paths(net, int(u), int(v), k)
+        assert paths, "connected network must yield at least one path"
+        assert len({tuple(p) for p in paths}) == len(paths)
+        for p in paths:
+            assert p[0] == u and p[-1] == v and len(set(p)) == len(p)
+            for a, b in zip(p, p[1:]):
+                assert b in net.neighbors(a)
+
+
+def small_job():
+    tasks = [
+        Task("src", 0.0, 0.0, pinned_node=0),
+        Task("a", 4.0, 2.0),
+        Task("b", 8.0, 2.0),
+    ]
+    return JobGraph(tasks, [(0, 1, 2.0), (1, 2, 1.0)])
+
+
+class TestAllocators:
+    def test_greedy_respects_memory(self):
+        net = NetworkGraph([10.0, 100.0], [8.0, 1.0], [(0, 1, 5.0)])
+        alloc, flows = allocate_greedy(net, small_job(), commit=False)
+        assert alloc.feasible
+        # node 1 is fast but lacks memory -> everything on node 0
+        assert all(alloc.assignment[1:] == 0)
+        assert flows == []
+
+    def test_greedy_partitions_when_comm_cheap(self):
+        # fast remote node with fat link: compute-heavy task b moves there
+        net = NetworkGraph([1.0, 100.0], [8.0, 8.0], [(0, 1, 100.0)])
+        alloc, _ = allocate_greedy(net, small_job(), commit=False)
+        assert alloc.assignment[2] == 1
+
+    def test_greedy_colocates_when_comm_expensive(self):
+        net = NetworkGraph([10.0, 100.0], [8.0, 8.0], [(0, 1, 0.01)])
+        alloc, flows = allocate_greedy(net, small_job(), commit=False)
+        assert all(alloc.assignment[1:] == alloc.assignment[1])
+
+    def test_greedy_commit_reserves_memory(self):
+        net = NetworkGraph([10.0, 100.0], [8.0, 8.0], [(0, 1, 100.0)])
+        before = net.mem_avail.copy()
+        alloc, _ = allocate_greedy(net, small_job(), commit=True)
+        used = before - net.mem_avail
+        assert used.sum() == pytest.approx(4.0)  # 2 + 2
+
+    def test_infeasible_when_no_memory(self):
+        net = NetworkGraph([10.0], [1.0], [])
+        alloc, flows = allocate_greedy(net, small_job(), commit=False)
+        assert not alloc.feasible and flows == []
+
+    def test_lr_picks_most_free_node(self):
+        net = NetworkGraph([1.0, 1.0, 1.0], [10.0, 50.0, 20.0], [(0, 1, 1), (1, 2, 1)])
+        alloc, _ = allocate_whole_job_lr(net, small_job(), commit=False)
+        assert all(alloc.assignment[1:] == 1)
+
+    def test_br_balances_utilization(self):
+        net = NetworkGraph([1.0, 1.0], [10.0, 10.0], [(0, 1, 1)])
+        net.mem_avail = np.array([2.0, 10.0])  # node0 is 80% utilized
+        alloc, _ = allocate_whole_job_br(net, small_job(), commit=False)
+        # placing on node1 moves its util toward the mean; node0 can't fit anyway
+        assert all(alloc.assignment[1:] == 1)
+
+    def test_video_job_structure(self):
+        rng = np.random.RandomState(0)
+        job = video_analytics_job(rng, source_node=2)
+        assert job.n_tasks == 10
+        assert job.tasks[0].pinned_node == 2
+        assert job.topological_order() is not None
+        # detect fans out to 6 heads which fan into the tracker
+        assert len(job.successors(2)) == 6
+        assert len(job.predecessors(9)) == 6

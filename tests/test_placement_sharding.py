@@ -1,0 +1,127 @@
+"""ENTS->TPU placement layer and the PartitionSpec rules."""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core import torus_network
+from repro.core.placement import place_job, stage_graph
+from repro.launch.sharding import batch_specs, cache_spec, param_spec
+
+
+def mesh_stub(pod=0, data=16, model=16):
+    axes = (("pod",) if pod else ()) + ("data", "model")
+    shape = dict([("pod", pod)] if pod else [] + []) if False else {}
+    if pod:
+        shape["pod"] = pod
+    shape["data"] = data
+    shape["model"] = model
+    return SimpleNamespace(shape=shape, axis_names=axes)
+
+
+class TestStageGraph:
+    def test_even_chunking_and_memory(self):
+        cfg = get_config("deepseek-v3-671b")
+        job = stage_graph(cfg, n_stages=32, microbatch_tokens=4096)
+        assert job.n_tasks == 33  # source + 32 stages
+        mems = [t.mem for t in job.tasks[1:]]
+        # all 61 layers distributed with stage sizes differing by <= 1 layer
+        assert max(mems) < 50e9
+        assert sum(mems) == pytest.approx(cfg.param_count() * 2.0, rel=0.01)
+
+    def test_train_triples_workload(self):
+        cfg = get_config("gemma3-1b")
+        serve = stage_graph(cfg, n_stages=4)
+        train = stage_graph(cfg, n_stages=4, train=True)
+        assert train.tasks[1].workload == pytest.approx(3 * serve.tasks[1].workload)
+
+    def test_flow_volumes_are_boundary_activations(self):
+        cfg = get_config("internlm2-1.8b")
+        job = stage_graph(cfg, n_stages=4, microbatch_tokens=1024)
+        inter = [vol for u, v, vol in job.edges if u != 0]
+        assert all(v == 1024 * cfg.d_model * 2.0 for v in inter)
+
+
+class TestPlacement:
+    def test_colocates_when_memory_allows(self):
+        net = torus_network(4, 4, link_bw=50e9, node_power=197e12, node_mem=64e9)
+        job = stage_graph(get_config("gemma3-1b"), n_stages=4)
+        rep = place_job(net, job)
+        nodes = {int(n) for t, n in zip(job.tasks, rep.assignment) if t.pinned_node is None}
+        assert len(nodes) == 1  # flows cost more than colocated compute
+
+    def test_partitions_when_memory_forces(self):
+        # ~15 GB of weights vs 8 GB nodes: at least two stages must split
+        net = torus_network(4, 4, link_bw=50e9, node_power=197e12, node_mem=8e9)
+        job = stage_graph(get_config("starcoder2-7b"), n_stages=4)
+        rep = place_job(net, job)
+        assert rep is not None
+        nodes = {int(n) for t, n in zip(job.tasks, rep.assignment) if t.pinned_node is None}
+        assert len(nodes) >= 2
+        assert rep.throughput > 0
+        assert len(rep.routes) == len(rep.bandwidths) > 0
+
+    def test_infeasible_returns_none(self):
+        net = torus_network(2, 2, link_bw=50e9, node_power=197e12, node_mem=1e9)
+        job = stage_graph(get_config("starcoder2-7b"), n_stages=4)
+        assert place_job(net, job) is None
+
+
+class TestParamSpecs:
+    def test_matrix_rule(self):
+        m = mesh_stub()
+        assert param_spec(m, ["stack", "mlp", "up"], (2048, 8192)) == P("data", "model")
+
+    def test_stacked_leading_dim_unsharded(self):
+        m = mesh_stub()
+        s = param_spec(m, ["stack", "groups", "mixer", "wq"], (24, 2048, 2048))
+        assert s == P(None, "data", "model")
+
+    def test_expert_weights_get_ep(self):
+        m = mesh_stub()
+        s = param_spec(m, ["stack", "groups", "moe", "w_up"], (58, 256, 7168, 2048))
+        assert s == P(None, "model", "data", None)
+
+    def test_embed_vocab_on_model(self):
+        m = mesh_stub()
+        assert param_spec(m, ["embed"], (129280, 7168)) == P("model", "data")
+
+    def test_indivisible_dims_replicate(self):
+        m = mesh_stub()
+        assert param_spec(m, ["stack", "mixer", "conv_w"], (4, 7296)) == P(None, "model")
+        assert param_spec(m, ["stack", "norm1"], (2048,)) == P()
+
+    def test_fsdp_over_pods(self):
+        m = mesh_stub(pod=2)
+        s = param_spec(m, ["stack", "mlp", "up"], (7168, 18432), fsdp=("pod", "data"))
+        assert s == P(("pod", "data"), "model")
+        # indivisible by 32 falls back to replicated on that dim
+        s2 = param_spec(m, ["stack", "mlp", "up"], (48, 18432), fsdp=("pod", "data"))
+        assert s2 == P(None, "model")
+
+
+class TestBatchCacheSpecs:
+    def test_batch_sharded_when_divisible(self):
+        import jax
+
+        m = mesh_stub()
+        shapes = {"tokens": jax.ShapeDtypeStruct((256, 4096), np.int32)}
+        assert batch_specs(m, shapes)["tokens"] == P(("data",), None)
+        shapes = {"tokens": jax.ShapeDtypeStruct((1, 1), np.int32)}
+        assert batch_specs(m, shapes)["tokens"] == P(None, None)
+
+    def test_kv_cache_heads_on_model(self):
+        m = mesh_stub()
+        # group-stacked cache leaves carry a leading G axis
+        s = cache_spec(m, ["blocks", "groups", "k"], (48, 128, 32768, 32, 96))
+        assert s == P(None, "data", None, "model", None)
+        # indivisible kv heads replicate; prefix leaves have no G axis
+        s = cache_spec(m, ["blocks", "prefix", "k"], (128, 32768, 8, 128))
+        assert s == P("data", None, None, None)
+
+    def test_long_context_shards_sequence(self):
+        m = mesh_stub()
+        s = cache_spec(m, ["blocks", "groups", "k"], (4, 1, 524288, 1, 256))
+        assert tuple(s)[2] == "data"

@@ -1,0 +1,39 @@
+"""Variant knobs and sharding hints (the hillclimb control surface)."""
+import jax.numpy as jnp
+
+from repro.launch import variants
+from repro.models import hints
+
+
+def test_variants_reset_between_activations():
+    variants.activate("no-act-sharding")
+    assert variants.KNOBS["act_sharding"] == "none"
+    variants.activate("baseline")
+    assert variants.KNOBS["act_sharding"] == "seq"
+    assert variants.KNOBS["moe_constraints"] is False  # reproduces §Roofline
+    variants.activate("default")
+    assert variants.KNOBS["moe_constraints"] is True  # §Perf.3 win is default
+
+
+def test_hints_noop_when_unset():
+    hints.set_activation_sharding(None)
+    hints.set_moe_sharding(None)
+    x = jnp.ones((2, 4, 8))
+    assert hints.constrain_activation(x) is x
+    b = jnp.ones((2, 4, 8, 16))
+    assert hints.constrain_moe_buffer(b) is b
+
+
+def test_moe_hint_only_applies_to_4d():
+    hints.set_moe_sharding("sentinel-not-used-for-3d")
+    x3 = jnp.ones((2, 4, 8))
+    assert hints.constrain_moe_buffer(x3) is x3
+    hints.set_moe_sharding(None)
+
+
+def test_activation_context_manager_restores():
+    hints.set_activation_sharding(None)
+    with hints.activation_sharding("something"):
+        pass
+    x = jnp.ones((2, 2, 2))
+    assert hints.constrain_activation(x) is x
