@@ -1,0 +1,168 @@
+"""Fleet benchmark: scheduler throughput across the scenario suite, plus the
+batched-vs-sequential JRBA engine comparison. Emits ``BENCH_fleet.json``.
+
+  PYTHONPATH=src python -m benchmarks.fleet [--smoke] [--out BENCH_fleet.json]
+
+Two sections:
+
+  * ``scenarios`` — for each registry scenario x policy: jobs scheduled per
+    second of scheduler wall-clock, and simulator events per second (the
+    control-plane capacity numbers the ROADMAP's fleet-scale goal needs).
+  * ``batch`` — N independent JRBA instances solved sequentially vs through
+    ``JRBAEngine.solve_many``; records the solve-stage and end-to-end
+    speedups and the max span deviation (must stay within 1%).
+
+``--smoke`` shrinks everything to a few events so CI can catch harness bitrot
+without measuring timings.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import (  # noqa: E402
+    JRBAEngine,
+    OnlineScheduler,
+    SCENARIOS,
+    jrba,
+    random_edge_network,
+    random_flow_sets,
+)
+
+BATCH_POLICIES = ("OTFS", "OTFA")
+
+
+def bench_scenarios(*, smoke: bool, n_jobs: int, seeds: int) -> list[dict]:
+    rows = []
+    for name, sc in sorted(SCENARIOS.items()):
+        for policy in BATCH_POLICIES:
+            engine = JRBAEngine(k=3, n_iters=60 if smoke else 200)
+            scheduled = events = 0
+            overhead = wall = 0.0
+            for seed in range(seeds):
+                net, arrivals = sc.build(seed=seed, n_jobs=n_jobs)
+                sched = OnlineScheduler(
+                    net, policy, k_paths=3, jrba_iters=engine.n_iters, engine=engine
+                )
+                t0 = time.perf_counter()
+                res = sched.run(arrivals)
+                wall += time.perf_counter() - t0
+                scheduled += res.n_scheduled
+                events += res.n_events
+                overhead += res.sched_overhead
+            rows.append(
+                {
+                    "scenario": name,
+                    "policy": policy,
+                    "jobs": n_jobs * seeds,
+                    "jobs_scheduled": scheduled,
+                    "events": events,
+                    "sched_seconds": overhead,
+                    "wall_seconds": wall,
+                    "sched_jobs_per_s": scheduled / overhead if overhead else None,
+                    "events_per_s": events / wall if wall else None,
+                    "engine": engine.stats.as_dict(),
+                }
+            )
+            print(
+                f"{name:16s} {policy:5s} sched={scheduled:3d} events={events:4d} "
+                f"sched_jobs/s={rows[-1]['sched_jobs_per_s']:.1f} "
+                f"events/s={rows[-1]['events_per_s']:.1f}"
+            )
+    return rows
+
+
+def _random_instances(n_instances: int, n_flows: int, seed: int = 0):
+    net = random_edge_network(12, mean_bandwidth=5.0, rng=np.random.RandomState(seed))
+    return net, random_flow_sets(net, n_instances, n_flows, seed=1000)
+
+
+def bench_batch(*, smoke: bool, n_instances: int = 32, n_flows: int = 6) -> dict:
+    """The acceptance measurement: batch vs sequential on one shape bucket."""
+    n_iters = 60 if smoke else 300
+    k = 3
+    net, sets = _random_instances(n_instances, n_flows)
+    engine = JRBAEngine(k=k, n_iters=n_iters)
+
+    seq = [jrba(net, fs, k=k, n_iters=n_iters) for fs in sets]  # also warms jit
+    bat = engine.solve_many(net, sets)  # warms the batched bucket
+    max_dev = max(
+        abs(a.span - b.span) / max(a.span, 1e-12) for a, b in zip(seq, bat)
+    )
+
+    t0 = time.perf_counter()
+    for fs in sets:
+        jrba(net, fs, k=k, n_iters=n_iters)
+    t_seq = time.perf_counter() - t0
+
+    solver_before = engine.stats.solve_seconds
+    t0 = time.perf_counter()
+    engine.solve_many(net, sets)
+    t_bat = time.perf_counter() - t0
+    t_bat_solve = engine.stats.solve_seconds - solver_before
+
+    # sequential solve-stage time through the engine's own single path, so
+    # both sides share program construction + path caching
+    seq_engine = JRBAEngine(k=k, n_iters=n_iters)
+    for fs in sets:
+        seq_engine.solve(net, fs)  # warm
+    solver_before = seq_engine.stats.solve_seconds
+    for fs in sets:
+        seq_engine.solve(net, fs)
+    t_seq_solve = seq_engine.stats.solve_seconds - solver_before
+
+    out = {
+        "n_instances": n_instances,
+        "n_flows": n_flows,
+        "n_iters": n_iters,
+        "max_span_rel_dev": max_dev,
+        "seq_seconds": t_seq,
+        "batch_seconds": t_bat,
+        "speedup_end_to_end": t_seq / t_bat if t_bat else None,
+        "seq_solve_seconds": t_seq_solve,
+        "batch_solve_seconds": t_bat_solve,
+        "speedup_solve_stage": t_seq_solve / t_bat_solve if t_bat_solve else None,
+        "engine": engine.stats.as_dict(),
+    }
+    print(
+        f"batch[{n_instances}x{n_flows} flows] dev={max_dev:.2e} "
+        f"solve {t_seq_solve * 1e3:.1f}ms->{t_bat_solve * 1e3:.1f}ms "
+        f"({out['speedup_solve_stage']:.1f}x) "
+        f"end-to-end {t_seq * 1e3:.1f}ms->{t_bat * 1e3:.1f}ms "
+        f"({out['speedup_end_to_end']:.1f}x)"
+    )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny run, no timing claims")
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    args = ap.parse_args()
+
+    n_jobs, seeds = (3, 1) if args.smoke else (8, 2)
+    report = {
+        "smoke": args.smoke,
+        "scenarios": bench_scenarios(smoke=args.smoke, n_jobs=n_jobs, seeds=seeds),
+        "batch": bench_batch(
+            smoke=args.smoke, n_instances=8 if args.smoke else 32
+        ),
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+    if not args.smoke:
+        dev = report["batch"]["max_span_rel_dev"]
+        speedup = report["batch"]["speedup_solve_stage"]
+        assert dev <= 0.01, f"batched span deviates {dev:.3%} from sequential"
+        assert speedup >= 5.0, f"batch solve speedup {speedup:.1f}x < 5x"
+
+
+if __name__ == "__main__":
+    main()

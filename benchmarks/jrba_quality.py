@@ -2,7 +2,6 @@
 waiting-time discussion: scheduling cost is the dominant overhead)."""
 from __future__ import annotations
 
-import itertools
 import time
 
 import numpy as np

@@ -11,7 +11,6 @@ import numpy as np
 
 from repro.core import (
     Allocation,
-    OnlineScheduler,
     equal_share_bandwidth,
     fig2_instance,
     flows_from_assignment,

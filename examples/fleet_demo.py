@@ -1,0 +1,67 @@
+"""Fleet demo: run every scenario through OTFS/OTFA with one shared engine,
+then show the batched JRBA path solving a fleet of instances in one call.
+
+  PYTHONPATH=src python examples/fleet_demo.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import (
+    JRBAEngine,
+    OnlineScheduler,
+    SCENARIOS,
+    jrba,
+    random_edge_network,
+    random_flow_sets,
+)
+
+
+def scenario_tour() -> None:
+    print("=== Scenario suite: OTFS vs OTFA on every topology ===")
+    engine = JRBAEngine(k=3, n_iters=150)  # shared: buckets compile once
+    print(f"{'scenario':18s} {'policy':6s} {'tput':>6s} {'wait':>7s} {'events':>6s}")
+    for name, sc in sorted(SCENARIOS.items()):
+        for policy in ("OTFS", "OTFA"):
+            net, arrivals = sc.build(seed=0, n_jobs=6)
+            sched = OnlineScheduler(net, policy, k_paths=3, jrba_iters=150, engine=engine)
+            res = sched.run(arrivals)
+            print(
+                f"{name:18s} {policy:6s} {res.avg_throughput:6.2f} "
+                f"{res.avg_waiting_time:7.3f} {res.n_events:6d}"
+            )
+    s = engine.stats
+    print(
+        f"engine: {s.single_solves} solves over {s.cache_misses} compiled "
+        f"shape buckets ({s.cache_hits} cache hits, {s.solve_seconds:.2f}s in solver)"
+    )
+
+
+def batched_fleet() -> None:
+    print("\n=== Batched JRBA: 32 independent instances, one compiled call ===")
+    # same instance set as benchmarks/fleet.py so the printed deviation
+    # matches the recorded BENCH_fleet.json numbers
+    net = random_edge_network(12, mean_bandwidth=5.0, rng=np.random.RandomState(0))
+    sets = random_flow_sets(net, 32, 6, seed=1000)
+    engine = JRBAEngine(k=3, n_iters=300)
+    engine.solve_many(net, sets)  # warm-up compile
+    for fs in sets:
+        jrba(net, fs, k=3, n_iters=300)
+
+    t0 = time.perf_counter()
+    seq = [jrba(net, fs, k=3, n_iters=300) for fs in sets]
+    t_seq = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    bat = engine.solve_many(net, sets)
+    t_bat = time.perf_counter() - t0
+    dev = max(abs(a.span - b.span) / a.span for a, b in zip(seq, bat))
+    print(f"sequential: {t_seq * 1e3:7.1f} ms")
+    print(f"batched:    {t_bat * 1e3:7.1f} ms  ({t_seq / t_bat:.1f}x, max dev {dev:.2e})")
+
+
+if __name__ == "__main__":
+    scenario_tour()
+    batched_fleet()

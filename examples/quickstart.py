@@ -15,7 +15,6 @@ from repro.core import (
     allocate_whole_job_lr,
     equal_share_bandwidth,
     jrba,
-    job_span,
     poisson_arrivals,
     random_edge_network,
     throughput,

@@ -12,7 +12,7 @@ import argparse  # noqa: E402
 import collections  # noqa: E402
 import re  # noqa: E402
 
-import jax  # noqa: E402
+import jax  # noqa: E402,F401  # imported to fail fast when no backend
 
 from repro.launch import variants  # noqa: E402
 from repro.launch.dryrun import _scan_corrected, analyze, lower_cell  # noqa: E402

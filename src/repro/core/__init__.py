@@ -17,23 +17,56 @@ from .allocation import (
     throughput,
 )
 from .graph import Flow, JobGraph, NetworkGraph, Task, random_edge_network, torus_network
-from .jrba import JRBAResult, brute_force_span, build_program, jrba, solve_relaxation, water_fill
+from .jrba import (
+    EngineStats,
+    JRBAEngine,
+    JRBAResult,
+    brute_force_span,
+    build_program,
+    jrba,
+    jrba_batch,
+    solve_relaxation,
+    solve_relaxation_batch,
+    water_fill,
+)
 from .online import POLICIES, JobRecord, OnlineScheduler, SimResult
 from .paths import avg_path_bandwidth, dijkstra, k_shortest_paths, path_links
 from .profiler import TPU_V5E, JobProfile, NodeClass, profile_job, profile_on_network
-from .workloads import fig2_instance, fig2_job, poisson_arrivals, video_analytics_job
+from .scenarios import (
+    SCENARIOS,
+    Scenario,
+    compute_nodes,
+    fat_tree,
+    get_scenario,
+    heterogeneous_mesh,
+    hierarchical_edge_cloud,
+    random_flow_sets,
+    scenario_names,
+    wan_mesh,
+)
+from .workloads import (
+    fig2_instance,
+    fig2_job,
+    poisson_arrivals,
+    poisson_burst_arrivals,
+    video_analytics_job,
+)
 
 __all__ = [
     "Allocation",
+    "EngineStats",
     "Flow",
     "JobGraph",
     "JobProfile",
     "JobRecord",
+    "JRBAEngine",
     "JRBAResult",
     "NetworkGraph",
     "NodeClass",
     "OnlineScheduler",
     "POLICIES",
+    "SCENARIOS",
+    "Scenario",
     "SimResult",
     "Task",
     "TPU_V5E",
@@ -43,22 +76,33 @@ __all__ = [
     "avg_path_bandwidth",
     "brute_force_span",
     "build_program",
+    "compute_nodes",
     "dijkstra",
     "equal_share_bandwidth",
+    "fat_tree",
     "fig2_instance",
     "fig2_job",
     "flows_from_assignment",
+    "get_scenario",
+    "heterogeneous_mesh",
+    "hierarchical_edge_cloud",
     "job_span",
     "jrba",
+    "jrba_batch",
     "k_shortest_paths",
     "path_links",
     "poisson_arrivals",
+    "poisson_burst_arrivals",
     "profile_job",
     "profile_on_network",
     "random_edge_network",
+    "random_flow_sets",
+    "scenario_names",
     "solve_relaxation",
+    "solve_relaxation_batch",
     "throughput",
     "torus_network",
     "video_analytics_job",
+    "wan_mesh",
     "water_fill",
 ]

@@ -21,6 +21,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import itertools
+import time
+import weakref
 
 import jax
 import jax.numpy as jnp
@@ -30,11 +32,15 @@ from .graph import Flow, NetworkGraph
 from .paths import k_shortest_paths, path_links
 
 __all__ = [
+    "EngineStats",
     "FlowProgram",
+    "JRBAEngine",
     "JRBAResult",
     "build_program",
     "solve_relaxation",
+    "solve_relaxation_batch",
     "jrba",
+    "jrba_batch",
     "water_fill",
     "brute_force_span",
 ]
@@ -65,20 +71,36 @@ def build_program(
     k: int = 4,
     capacity: np.ndarray | None = None,
     pad: bool = True,
+    pad_to: int | None = None,
+    path_cache: dict | None = None,
 ) -> FlowProgram | None:
     """Enumerate P_i^k and build the (Nf, K, L) usage tensor. Colocated flows
     (src == dst) never reach here — they cost nothing and are dropped by the
-    allocator. Returns None when Nf == 0."""
+    allocator. Returns None when Nf == 0. ``pad_to`` pins the padded row count
+    to an exact bucket size (used by the batched engine so instances with
+    different flow counts stack into one tensor). ``path_cache`` memoizes
+    Yen's enumeration per (src, dst) — sound because candidate paths depend
+    only on topology and static bandwidth, not on residual capacity."""
     flows = [f for f in flows if f.src != f.dst and f.volume > 0]
     if not flows:
         return None
     L = len(net.links)
     all_paths: list[list[list[int]]] = []
     for f in flows:
-        ps = k_shortest_paths(net, f.src, f.dst, k)
+        key = (f.src, f.dst, k)
+        ps = None if path_cache is None else path_cache.get(key)
+        if ps is None:
+            ps = k_shortest_paths(net, f.src, f.dst, k)
+            if path_cache is not None:
+                path_cache[key] = ps
         all_paths.append(ps)
     n_real = len(flows)
-    Nf = -(-n_real // 8) * 8 if pad else n_real  # round up to a multiple of 8
+    if pad_to is not None:
+        if pad_to < n_real:
+            raise ValueError(f"pad_to={pad_to} < {n_real} real flows")
+        Nf = pad_to
+    else:
+        Nf = -(-n_real // 8) * 8 if pad else n_real  # round up to a multiple of 8
     usage = np.zeros((Nf, k, L), dtype=np.float32)
     valid = np.zeros((Nf, k), dtype=bool)
     valid[n_real:, 0] = True  # dummies: one no-op path
@@ -104,8 +126,7 @@ def build_program(
 # ---------------------------------------------------------------------------
 # The JAX solver for P3-RELAX-CVX
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("n_iters",))
-def _solve_md(
+def _solve_md_impl(
     usage: jax.Array,  # (Nf, K, L)
     valid: jax.Array,  # (Nf, K)
     volumes: jax.Array,  # (Nf,)
@@ -145,6 +166,23 @@ def _solve_md(
     return w, jnp.max(congestion(w))
 
 
+_solve_md = functools.partial(jax.jit, static_argnames=("n_iters",))(_solve_md_impl)
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters",))
+def _solve_md_batched(
+    usage: jax.Array,  # (B, Nf, K, L)
+    valid: jax.Array,  # (B, Nf, K)
+    volumes: jax.Array,  # (B, Nf)
+    capacity: jax.Array,  # (B, L) — per-instance (OTFS solves on residuals)
+    n_iters: int = 400,
+    lr: float = 0.25,
+) -> tuple[jax.Array, jax.Array]:
+    """B independent JRBA relaxations in one compiled call (the fleet path)."""
+    solve = lambda u, va, vo, c: _solve_md_impl(u, va, vo, c, n_iters, lr)  # noqa: E731
+    return jax.vmap(solve)(usage, valid, volumes, capacity)
+
+
 def solve_relaxation(prog: FlowProgram, *, n_iters: int = 400) -> tuple[np.ndarray, float]:
     """Solve P3-RELAX-CVX; returns (m_i^k = V_i w_i^k, relaxed span TH*)."""
     w, span = _solve_md(
@@ -156,6 +194,30 @@ def solve_relaxation(prog: FlowProgram, *, n_iters: int = 400) -> tuple[np.ndarr
     )
     m = np.asarray(w) * prog.volumes[:, None]
     return m, float(span)
+
+
+def solve_relaxation_batch(
+    progs: list[FlowProgram], *, n_iters: int = 400
+) -> list[tuple[np.ndarray, float]]:
+    """Solve N same-shape programs in one vmapped call.
+
+    All programs must already be padded to a common (Nf, K, L) bucket (the
+    engine guarantees this); raises on shape mismatch rather than silently
+    re-padding, so callers control bucketing policy."""
+    shapes = {p.usage.shape for p in progs}
+    if len(shapes) != 1:
+        raise ValueError(f"programs span multiple shape buckets: {sorted(shapes)}")
+    w, spans = _solve_md_batched(
+        jnp.asarray(np.stack([p.usage for p in progs])),
+        jnp.asarray(np.stack([p.valid for p in progs])),
+        jnp.asarray(np.stack([p.volumes for p in progs])),
+        jnp.asarray(np.stack([p.capacity for p in progs])),
+        n_iters=n_iters,
+    )
+    w, spans = np.asarray(w), np.asarray(spans)
+    return [
+        (w[i] * p.volumes[:, None], float(spans[i])) for i, p in enumerate(progs)
+    ]
 
 
 # ---------------------------------------------------------------------------
@@ -252,22 +314,17 @@ def _best_response_sweeps(
     return ks
 
 
-def jrba(
-    net: NetworkGraph,
-    flows: list[Flow],
+def _finalize(
+    prog: FlowProgram,
+    m: np.ndarray,
+    relaxed: float,
     *,
-    k: int = 4,
-    capacity: np.ndarray | None = None,
-    n_iters: int = 400,
     water_filling: bool = False,
     refine: bool = True,
-) -> JRBAResult | None:
-    """Algorithm 2. ``capacity`` overrides link capacity (the online scheduler
-    passes residual capacity for OTFS and full capacity for OTFA re-runs)."""
-    prog = build_program(net, flows, k=k, capacity=capacity)
-    if prog is None:
-        return None
-    m, relaxed = solve_relaxation(prog, n_iters=n_iters)
+) -> JRBAResult:
+    """Rounding (k* = argmax), vertex-recovery refinement, Eq. 15 bandwidth
+    recovery and the optional water-filling top-up — the host-side half of
+    Algorithm 2, shared by the single and batched solve paths."""
     ks = np.argmax(np.where(prog.valid, m, -1.0), axis=1)  # k* = argmax_k m_i^k
     if refine:
         ks = _best_response_sweeps(prog, ks)
@@ -288,6 +345,200 @@ def jrba(
         relaxed_span=relaxed,
         flows=prog.flows,
         link_load=link_load,
+    )
+
+
+def jrba(
+    net: NetworkGraph,
+    flows: list[Flow],
+    *,
+    k: int = 4,
+    capacity: np.ndarray | None = None,
+    n_iters: int = 400,
+    water_filling: bool = False,
+    refine: bool = True,
+) -> JRBAResult | None:
+    """Algorithm 2. ``capacity`` overrides link capacity (the online scheduler
+    passes residual capacity for OTFS and full capacity for OTFA re-runs)."""
+    prog = build_program(net, flows, k=k, capacity=capacity)
+    if prog is None:
+        return None
+    m, relaxed = solve_relaxation(prog, n_iters=n_iters)
+    return _finalize(prog, m, relaxed, water_filling=water_filling, refine=refine)
+
+
+# ---------------------------------------------------------------------------
+# Fleet engine: shape-bucketed compilation cache + batched solves
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class EngineStats:
+    """Observability for the solver cache (`hits`/`misses` count shape-bucket
+    signatures: a miss triggers an XLA trace+compile, a hit reuses it)."""
+
+    single_solves: int = 0
+    batched_solves: int = 0  # compiled batch calls
+    batched_instances: int = 0  # programs solved through batch calls
+    cache_hits: int = 0
+    cache_misses: int = 0
+    solve_seconds: float = 0.0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class JRBAEngine:
+    """Cached, batched JRBA solver for fleet-scale scheduling.
+
+    Two ideas:
+
+    * **Shape buckets** — flow programs are padded so Nf lands on a power-of
+      -two bucket (min 8). The jitted solver then sees O(log N) distinct
+      shapes instead of one per flow count, so online re-scheduling stops
+      paying per-event trace/compile cost after warm-up.
+    * **Batched solves** — ``solve_many`` stacks same-bucket programs into a
+      (B, Nf, K, L) tensor and runs one vmapped+jitted relaxation for all of
+      them; per-instance rounding/Eq. 15 stays on host. N independent
+      instances (a fleet of jobs, or OTFS solves across simulations) cost one
+      dispatch instead of N.
+
+    The engine is deliberately topology-agnostic: programs built on different
+    networks (different L) simply land in different buckets.
+    """
+
+    def __init__(self, *, k: int = 4, n_iters: int = 400, min_bucket: int = 8) -> None:
+        self.k = k
+        self.n_iters = n_iters
+        self.min_bucket = min_bucket
+        self.stats = EngineStats()
+        self._seen_shapes: set[tuple] = set()
+        # per-network (src, dst, k) -> candidate paths; weak keys so dropping
+        # a topology frees its cache
+        self._paths: "weakref.WeakKeyDictionary[NetworkGraph, dict]" = (
+            weakref.WeakKeyDictionary()
+        )
+
+    def bucket(self, n_real: int) -> int:
+        """Smallest power-of-two bucket (>= min_bucket) holding n_real rows."""
+        b = self.min_bucket
+        while b < n_real:
+            b *= 2
+        return b
+
+    def _note_shape(self, key: tuple) -> None:
+        if key in self._seen_shapes:
+            self.stats.cache_hits += 1
+        else:
+            self._seen_shapes.add(key)
+            self.stats.cache_misses += 1
+
+    def build(
+        self,
+        net: NetworkGraph,
+        flows: list[Flow],
+        *,
+        capacity: np.ndarray | None = None,
+    ) -> FlowProgram | None:
+        cache = self._paths.get(net)
+        if cache is None:
+            cache = self._paths.setdefault(net, {})
+        # mirror build_program's flow filter so the bucket is known up front
+        # and the program is built exactly once
+        n_real = sum(1 for f in flows if f.src != f.dst and f.volume > 0)
+        if n_real == 0:
+            return None
+        return build_program(
+            net,
+            flows,
+            k=self.k,
+            capacity=capacity,
+            pad_to=self.bucket(n_real),
+            path_cache=cache,
+        )
+
+    def solve(
+        self,
+        net: NetworkGraph,
+        flows: list[Flow],
+        *,
+        capacity: np.ndarray | None = None,
+        water_filling: bool = False,
+        refine: bool = True,
+    ) -> JRBAResult | None:
+        """Drop-in replacement for :func:`jrba` with bucketing + cache stats."""
+        prog = self.build(net, flows, capacity=capacity)
+        if prog is None:
+            return None
+        self._note_shape(("single", prog.usage.shape, self.n_iters))
+        t0 = time.perf_counter()
+        m, relaxed = solve_relaxation(prog, n_iters=self.n_iters)
+        self.stats.solve_seconds += time.perf_counter() - t0
+        self.stats.single_solves += 1
+        return _finalize(prog, m, relaxed, water_filling=water_filling, refine=refine)
+
+    def solve_many(
+        self,
+        net: NetworkGraph,
+        flow_sets: list[list[Flow]],
+        *,
+        capacities: list[np.ndarray] | None = None,
+        water_filling: bool = False,
+        refine: bool = True,
+    ) -> list[JRBAResult | None]:
+        """Solve N independent JRBA instances; same-bucket instances share one
+        vmapped compiled call. Result list aligns with ``flow_sets`` (None for
+        empty/colocated-only instances)."""
+        if capacities is None:
+            capacities = [None] * len(flow_sets)
+        elif len(capacities) != len(flow_sets):
+            raise ValueError(
+                f"capacities ({len(capacities)}) must align with flow_sets "
+                f"({len(flow_sets)})"
+            )
+        progs: list[FlowProgram | None] = [
+            self.build(net, fs, capacity=cap) for fs, cap in zip(flow_sets, capacities)
+        ]
+        results: list[JRBAResult | None] = [None] * len(flow_sets)
+        by_bucket: dict[tuple, list[int]] = {}
+        for i, p in enumerate(progs):
+            if p is not None:
+                by_bucket.setdefault(p.usage.shape, []).append(i)
+        for shape, idxs in by_bucket.items():
+            group = [progs[i] for i in idxs]
+            # the jitted batch solver specializes on B too, so the cache key
+            # must include the group size or stats would claim false hits
+            self._note_shape(("batch", len(group), shape, self.n_iters))
+            t0 = time.perf_counter()
+            solved = solve_relaxation_batch(group, n_iters=self.n_iters)
+            self.stats.solve_seconds += time.perf_counter() - t0
+            self.stats.batched_solves += 1
+            self.stats.batched_instances += len(group)
+            for i, prog, (m, relaxed) in zip(idxs, group, solved):
+                results[i] = _finalize(
+                    prog, m, relaxed, water_filling=water_filling, refine=refine
+                )
+        return results
+
+
+def jrba_batch(
+    net: NetworkGraph,
+    flow_sets: list[list[Flow]],
+    *,
+    k: int = 4,
+    capacities: list[np.ndarray] | None = None,
+    n_iters: int = 400,
+    water_filling: bool = False,
+    refine: bool = True,
+) -> list[JRBAResult | None]:
+    """Batched Algorithm 2 over N independent instances (one-shot convenience
+    around :class:`JRBAEngine`; reuse an engine across calls to keep its
+    compilation cache warm)."""
+    eng = JRBAEngine(k=k, n_iters=n_iters)
+    return eng.solve_many(
+        net,
+        flow_sets,
+        capacities=capacities,
+        water_filling=water_filling,
+        refine=refine,
     )
 
 

@@ -34,7 +34,7 @@ from .allocation import (
     job_span,
 )
 from .graph import Flow, JobGraph, NetworkGraph
-from .jrba import jrba
+from .jrba import JRBAEngine
 from .paths import path_links
 
 __all__ = ["JobRecord", "SimResult", "OnlineScheduler", "POLICIES"]
@@ -80,6 +80,11 @@ class SimResult:
     records: list[JobRecord]
     sched_overhead: float  # total wall-clock spent inside scheduling calls
     unfinished: int
+    n_events: int = 0  # simulator events processed (arrivals + completions)
+
+    @property
+    def n_scheduled(self) -> int:
+        return sum(1 for r in self.records if r.scheduled)
 
     @property
     def avg_throughput(self) -> float:
@@ -115,16 +120,22 @@ class OnlineScheduler:
         k_paths: int = 4,
         jrba_iters: int = 300,
         max_acceptable_span: float = 1e4,
+        engine: JRBAEngine | None = None,
     ) -> None:
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
         self.net = net
         self.policy = policy
         self.base = policy.split("+")[0]
-        self.k_paths = k_paths
-        self.jrba_iters = jrba_iters
         self.max_acceptable_span = max_acceptable_span
         self.water_fill = policy.endswith("+WF")
+        # shared engines keep compiled shape buckets + path caches warm across
+        # schedulers (a fleet of simulations pays compile cost once); a passed
+        # engine is authoritative, so k_paths/jrba_iters re-derive from it
+        # rather than silently diverging
+        self.engine = engine or JRBAEngine(k=k_paths, n_iters=jrba_iters)
+        self.k_paths = self.engine.k
+        self.jrba_iters = self.engine.n_iters
 
     # -- per-policy allocation ----------------------------------------------
     def _allocate(self, job: JobGraph, job_id: int) -> tuple[Allocation, list[Flow]]:
@@ -204,12 +215,10 @@ class OnlineScheduler:
                         r.span = job_span(net, r.alloc, r.flows, np.zeros(0))
                         set_finish_event(r, now)
                 return
-            res = jrba(
+            res = self.engine.solve(
                 net,
                 all_flows,
-                k=self.k_paths,
                 capacity=net.capacity,
-                n_iters=self.jrba_iters,
                 water_filling=self.water_fill,
             )
             lookup = {id(f): (b, route) for f, b, route in zip(res.flows, res.bandwidth, res.routes)}
@@ -233,12 +242,10 @@ class OnlineScheduler:
                     continue
                 if self.base == "OTFS":
                     t0 = time.perf_counter()
-                    res = jrba(
+                    res = self.engine.solve(
                         net,
                         flows,
-                        k=self.k_paths,
                         capacity=net.residual,
-                        n_iters=self.jrba_iters,
                         water_filling=self.water_fill,
                     )
                     sched_overhead += time.perf_counter() - t0
@@ -273,10 +280,12 @@ class OnlineScheduler:
                 r.initial_span = r.span
 
         by_id = {r.job_id: r for r in records}
+        n_events = 0
         while events:
             now, _, kind, jid = heapq.heappop(events)
             if now > max_time:
                 break
+            n_events += 1
             r = by_id[jid]
             if kind == "finish":
                 if r not in q_run or abs(r.finish_time - now) > 1e-9:
@@ -300,4 +309,4 @@ class OnlineScheduler:
                 q_wait.append(r)
             schedule_round(now)
         unfinished = sum(1 for r in records if not r.done)
-        return SimResult(records, sched_overhead, unfinished)
+        return SimResult(records, sched_overhead, unfinished, n_events)

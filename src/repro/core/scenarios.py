@@ -1,0 +1,300 @@
+"""Scenario generator suite — diverse topologies/workloads beyond Fig. 2/9.
+
+The paper evaluates on one physical 10-node testbed plus random meshes
+(Sec. VI-A4). Fleet-scale evaluation needs structurally different networks —
+related schedulers (Oakestra's multi-cluster hierarchy, KCES's cloud-edge
+workflows) stress exactly the regimes a flat mesh never produces:
+
+  * ``hierarchical_edge_cloud`` — weak leaves behind aggregation switches and
+    a fat cloud: thin access links, strong incentive to partition.
+  * ``wan_mesh`` — Waxman geometric graph: long multi-hop routes, bandwidth
+    decaying with distance (multi-site federations over WAN).
+  * ``fat_tree`` — k-ary data-center fabric with compute only at the hosts;
+    switches are transit-only (zero memory keeps the allocator off them).
+  * ``heterogeneous_mesh`` — log-normal node-power spread; ``spread`` sweeps
+    from near-homogeneous to three-orders-of-magnitude heterogeneity.
+
+Each registry entry pairs a topology factory with an arrival process (steady
+Poisson or Markov-modulated bursts) so benchmarks and tests can iterate
+``SCENARIOS`` without per-scenario glue.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from .graph import Flow, JobGraph, NetworkGraph, random_edge_network
+from .workloads import poisson_arrivals, poisson_burst_arrivals
+
+__all__ = [
+    "Scenario",
+    "SCENARIOS",
+    "compute_nodes",
+    "fat_tree",
+    "get_scenario",
+    "heterogeneous_mesh",
+    "hierarchical_edge_cloud",
+    "random_flow_sets",
+    "scenario_names",
+    "wan_mesh",
+]
+
+Arrivals = list[tuple[float, JobGraph, float]]
+
+
+def compute_nodes(net: NetworkGraph, *, min_mem: float = 0.5) -> list[int]:
+    """Nodes that can actually host tasks (and thus pin video sources) —
+    transit switches in fabric topologies have no memory."""
+    return [i for i in range(net.n_nodes) if net.mem_max[i] >= min_mem]
+
+
+def random_flow_sets(
+    net: NetworkGraph,
+    n_instances: int,
+    n_flows: int,
+    *,
+    seed: int = 0,
+    volume_range: tuple[float, float] = (0.5, 4.0),
+) -> list[list[Flow]]:
+    """N independent random flow sets on one topology — the canonical input
+    for fleet-style batched-JRBA experiments (shared by benchmarks/tests)."""
+    sets: list[list[Flow]] = []
+    for s in range(n_instances):
+        rng = np.random.RandomState(seed + 100 * s)
+        flows = []
+        for i in range(n_flows):
+            u, v = rng.choice(net.n_nodes, size=2, replace=False)
+            flows.append(Flow(int(u), int(v), float(rng.uniform(*volume_range)), job_id=i))
+        sets.append(flows)
+    return sets
+
+
+# ---------------------------------------------------------------------------
+# Topology generators
+# ---------------------------------------------------------------------------
+def hierarchical_edge_cloud(
+    n_edge: int = 12,
+    n_agg: int = 3,
+    n_cloud: int = 1,
+    *,
+    edge_bw: float = 1.0,
+    agg_bw: float = 4.0,
+    core_bw: float = 12.0,
+    rng: np.random.RandomState | None = None,
+) -> NetworkGraph:
+    """Three-tier edge -> aggregation -> cloud tree (plus an aggregation ring
+    for path diversity). Node ids: edges, then aggs, then clouds."""
+    rng = rng or np.random.RandomState(0)
+    power = [float(rng.choice([10.0, 20.0, 40.0])) for _ in range(n_edge)]
+    mem = [float(rng.choice([1.0, 2.0, 4.0])) for _ in range(n_edge)]
+    power += [80.0] * n_agg + [400.0] * n_cloud
+    mem += [8.0] * n_agg + [64.0] * n_cloud
+    agg0, cloud0 = n_edge, n_edge + n_agg
+    links: list[tuple[int, int, float]] = []
+    for e in range(n_edge):
+        links.append((e, agg0 + e % n_agg, edge_bw * float(rng.uniform(0.7, 1.3))))
+    for a in range(n_agg):
+        if n_agg > 1:
+            links.append((agg0 + a, agg0 + (a + 1) % n_agg, agg_bw))
+        for c in range(n_cloud):
+            links.append((agg0 + a, cloud0 + c, core_bw))
+    # the ring wraps onto itself for n_agg == 2; dedup handled by NetworkGraph
+    return NetworkGraph(power, mem, links)
+
+
+def wan_mesh(
+    n_nodes: int = 16,
+    *,
+    alpha: float = 0.4,
+    beta: float = 0.3,
+    mean_bandwidth: float = 2.0,
+    rng: np.random.RandomState | None = None,
+) -> NetworkGraph:
+    """Waxman random geometric graph: P(link) = alpha * exp(-d / (beta * D)).
+    Bandwidth decays with distance (long WAN hauls are thin). A nearest-
+    neighbour chain guarantees connectivity."""
+    rng = rng or np.random.RandomState(0)
+    xy = rng.uniform(0.0, 1.0, size=(n_nodes, 2))
+    dmax = float(np.sqrt(2.0))
+    links: dict[tuple[int, int], float] = {}
+
+    def bw(d: float) -> float:
+        return mean_bandwidth * (1.5 - d / dmax) * float(rng.uniform(0.8, 1.2))
+
+    for i in range(1, n_nodes):  # chain each node to its nearest predecessor
+        d = np.linalg.norm(xy[:i] - xy[i], axis=1)
+        j = int(np.argmin(d))
+        links[(j, i)] = bw(float(d[j]))
+    for i in range(n_nodes):
+        for j in range(i + 1, n_nodes):
+            d = float(np.linalg.norm(xy[i] - xy[j]))
+            if rng.uniform() < alpha * np.exp(-d / (beta * dmax)):
+                links.setdefault((i, j), bw(d))
+    klass = rng.randint(4, size=n_nodes)
+    power = [(10.0, 40.0, 80.0, 200.0)[k] for k in klass]
+    mem = [(2.0, 4.0, 8.0, 64.0)[k] for k in klass]
+    return NetworkGraph(power, mem, [(u, v, b) for (u, v), b in links.items()])
+
+
+def fat_tree(
+    k: int = 4,
+    *,
+    host_bw: float = 1.0,
+    agg_bw: float = 2.0,
+    core_bw: float = 4.0,
+    host_power: float = 40.0,
+    host_mem: float = 8.0,
+) -> NetworkGraph:
+    """k-ary fat-tree (k even): k pods of k/2 edge + k/2 aggregation
+    switches, (k/2)^2 core switches, k^3/4 hosts. Only hosts have memory, so
+    tasks land on hosts and switches stay pure transit (their tiny-but-
+    positive power avoids divide-by-zero in placement scoring)."""
+    if k % 2:
+        raise ValueError("fat-tree arity k must be even")
+    half = k // 2
+    n_hosts = k * half * half
+    n_edge = n_agg = k * half
+    n_core = half * half
+    host0, edge0, agg0, core0 = 0, n_hosts, n_hosts + n_edge, n_hosts + n_edge + n_agg
+    power = [host_power] * n_hosts + [1e-3] * (n_edge + n_agg + n_core)
+    mem = [host_mem] * n_hosts + [0.0] * (n_edge + n_agg + n_core)
+    links: list[tuple[int, int, float]] = []
+    for pod in range(k):
+        for e in range(half):
+            edge_sw = edge0 + pod * half + e
+            for h in range(half):
+                links.append((host0 + (pod * half + e) * half + h, edge_sw, host_bw))
+            for a in range(half):
+                links.append((edge_sw, agg0 + pod * half + a, agg_bw))
+        for a in range(half):
+            for c in range(half):
+                links.append((agg0 + pod * half + a, core0 + a * half + c, core_bw))
+    return NetworkGraph(power, mem, links)
+
+
+def heterogeneous_mesh(
+    n_nodes: int = 16,
+    *,
+    spread: float = 1.0,
+    mean_power: float = 50.0,
+    mean_bandwidth: float = 1.5,
+    rng: np.random.RandomState | None = None,
+) -> NetworkGraph:
+    """Random mesh with log-normal node power: ``spread`` is the sigma of
+    log-power, sweeping near-homogeneous (0.1) to extreme (2.0) fleets."""
+    rng = rng or np.random.RandomState(0)
+    base = random_edge_network(n_nodes, mean_bandwidth=mean_bandwidth, rng=rng)
+    power = mean_power * np.exp(rng.normal(0.0, spread, size=n_nodes))
+    mem = np.clip(power / 10.0, 1.0, 64.0)
+    links = [(u, v, float(base.capacity[i])) for i, (u, v) in enumerate(base.links)]
+    return NetworkGraph(power.tolist(), mem.tolist(), links)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A reproducible (topology, workload) pair for fleet evaluation."""
+
+    name: str
+    description: str
+    make_net: Callable[[np.random.RandomState], NetworkGraph]
+    make_arrivals: Callable[[NetworkGraph, np.random.RandomState, int], Arrivals]
+
+    def build(
+        self, *, seed: int = 0, n_jobs: int = 8
+    ) -> tuple[NetworkGraph, Arrivals]:
+        net = self.make_net(np.random.RandomState(seed))
+        arrivals = self.make_arrivals(net, np.random.RandomState(seed + 1), n_jobs)
+        return net, arrivals
+
+
+def _steady(lam: float = 0.5, total_units: float = 12.0):
+    def make(net: NetworkGraph, rng: np.random.RandomState, n_jobs: int) -> Arrivals:
+        return poisson_arrivals(
+            n_jobs,
+            net.n_nodes,
+            rng,
+            lam=lam,
+            total_units=total_units,
+            source_nodes=compute_nodes(net),
+        )
+
+    return make
+
+
+def _bursty(lam_burst: float = 3.0, total_units: float = 12.0):
+    def make(net: NetworkGraph, rng: np.random.RandomState, n_jobs: int) -> Arrivals:
+        return poisson_burst_arrivals(
+            n_jobs,
+            net.n_nodes,
+            rng,
+            lam_burst=lam_burst,
+            total_units=total_units,
+            source_nodes=compute_nodes(net),
+        )
+
+    return make
+
+
+SCENARIOS: dict[str, Scenario] = {
+    s.name: s
+    for s in [
+        Scenario(
+            "edge-mesh",
+            "paper Sec. VI random mesh, steady Poisson arrivals",
+            lambda rng: random_edge_network(14, mean_bandwidth=1.0, rng=rng),
+            _steady(),
+        ),
+        Scenario(
+            "edge-mesh-burst",
+            "paper mesh under Markov-modulated flash crowds",
+            lambda rng: random_edge_network(14, mean_bandwidth=1.0, rng=rng),
+            _bursty(),
+        ),
+        Scenario(
+            "edge-cloud",
+            "three-tier edge/aggregation/cloud hierarchy",
+            lambda rng: hierarchical_edge_cloud(12, 3, 1, rng=rng),
+            _steady(),
+        ),
+        Scenario(
+            "wan-mesh",
+            "Waxman WAN federation, bursty arrivals",
+            lambda rng: wan_mesh(16, rng=rng),
+            _bursty(),
+        ),
+        Scenario(
+            "fat-tree",
+            "k=4 data-center fabric, compute at hosts only",
+            lambda rng: fat_tree(4),
+            _steady(lam=1.0),
+        ),
+        Scenario(
+            "hetero-low",
+            "near-homogeneous node power (sigma=0.2)",
+            lambda rng: heterogeneous_mesh(16, spread=0.2, rng=rng),
+            _steady(),
+        ),
+        Scenario(
+            "hetero-high",
+            "extreme node-power spread (sigma=1.5)",
+            lambda rng: heterogeneous_mesh(16, spread=1.5, rng=rng),
+            _steady(),
+        ),
+    ]
+}
+
+
+def scenario_names() -> list[str]:
+    return sorted(SCENARIOS)
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; one of {scenario_names()}") from None

@@ -16,7 +16,13 @@ import numpy as np
 
 from .graph import JobGraph, NetworkGraph, Task
 
-__all__ = ["video_analytics_job", "poisson_arrivals", "fig2_instance", "fig2_job"]
+__all__ = [
+    "video_analytics_job",
+    "poisson_arrivals",
+    "poisson_burst_arrivals",
+    "fig2_instance",
+    "fig2_job",
+]
 
 
 def video_analytics_job(
@@ -74,15 +80,62 @@ def poisson_arrivals(
     lam: float = 0.5,  # jobs/second (paper Sec. VI)
     total_units: float = 30.0,  # stream units each job processes
     input_size: float = 5.0,
+    source_nodes: list[int] | None = None,  # restrict cameras (e.g. fat-tree hosts)
 ) -> list[tuple[float, JobGraph, float]]:
     t = 0.0
     arrivals = []
     for _ in range(n_jobs):
         t += rng.exponential(1.0 / lam)
-        src = int(rng.randint(net_nodes))
+        src = _pick_source(rng, net_nodes, source_nodes)
         job = video_analytics_job(rng, src, input_size=input_size)
         arrivals.append((t, job, total_units * rng.uniform(0.7, 1.3)))
     return arrivals
+
+
+def poisson_burst_arrivals(
+    n_jobs: int,
+    net_nodes: int,
+    rng: np.random.RandomState,
+    *,
+    lam_base: float = 0.2,  # jobs/s in the quiet phase
+    lam_burst: float = 3.0,  # jobs/s inside a burst
+    burst_dwell: float = 4.0,  # mean burst duration (s)
+    quiet_dwell: float = 15.0,  # mean quiet duration (s)
+    total_units: float = 30.0,
+    input_size: float = 5.0,
+    source_nodes: list[int] | None = None,
+) -> list[tuple[float, JobGraph, float]]:
+    """Two-state Markov-modulated Poisson arrivals (flash-crowd traffic).
+
+    The process alternates exponential-dwell quiet/burst phases; within a
+    phase arrivals are Poisson at the phase rate. Bursts are what separate
+    OTFS from OTFA in queueing behaviour — steady Poisson rarely builds a
+    deep enough backlog."""
+    arrivals: list[tuple[float, JobGraph, float]] = []
+    t = 0.0
+    bursting = False
+    phase_end = rng.exponential(quiet_dwell)
+    while len(arrivals) < n_jobs:
+        lam = lam_burst if bursting else lam_base
+        dt = rng.exponential(1.0 / lam)
+        if t + dt >= phase_end:  # phase flips before the next arrival lands
+            t = phase_end
+            bursting = not bursting
+            phase_end = t + rng.exponential(burst_dwell if bursting else quiet_dwell)
+            continue
+        t += dt
+        src = _pick_source(rng, net_nodes, source_nodes)
+        job = video_analytics_job(rng, src, input_size=input_size)
+        arrivals.append((t, job, total_units * rng.uniform(0.7, 1.3)))
+    return arrivals
+
+
+def _pick_source(
+    rng: np.random.RandomState, net_nodes: int, source_nodes: list[int] | None
+) -> int:
+    if source_nodes is not None:
+        return int(source_nodes[rng.randint(len(source_nodes))])
+    return int(rng.randint(net_nodes))
 
 
 # ---------------------------------------------------------------------------

@@ -17,7 +17,6 @@ query head index (kv head = h // group_size).
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -160,7 +160,7 @@ def cache_spec(mesh, names: list[str], shape: tuple[int, ...]) -> P:
         return P()
     batch_ax = lead
     if shape[batch_ax] % bsz == 0:
-        spec[batch_ax] = b
+        spec[batch_ax] = b if len(b) > 1 else b[0]
     elif leaf in ("k", "v", "ckv", "kpe") and shape[batch_ax + 1] % data == 0:
         spec[batch_ax + 1] = "data"  # long-context: shard the sequence
     if leaf in ("k", "v") and len(shape) > batch_ax + 2 and shape[batch_ax + 2] % model == 0:

@@ -9,7 +9,6 @@ MODEL_FLOPS/HLO_FLOPs ratio).
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

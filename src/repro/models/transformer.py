@@ -7,7 +7,6 @@ parameter set *outside* the scan. ``remat`` checkpoints the scan body.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -10,6 +10,7 @@ checkpoint; ``latest_step`` scans for complete snapshots only.
 """
 from __future__ import annotations
 
+import importlib
 import json
 import os
 import re
@@ -18,11 +19,23 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import msgpack
 import numpy as np
-import zstandard
 
 __all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]
+
+
+def _require(name: str):
+    """Lazy import for heavyweight optional deps (``zstandard``, ``msgpack``).
+
+    Checkpointing is the only subsystem that needs them; importing this module
+    (e.g. during test collection on a minimal environment) must not."""
+    try:
+        return importlib.import_module(name)
+    except ModuleNotFoundError as e:  # pragma: no cover - env dependent
+        raise ModuleNotFoundError(
+            f"checkpointing requires the optional dependency {name!r}; "
+            f"install it with `pip install {name}` to save/restore checkpoints"
+        ) from e
 
 _FLAG = "COMPLETE"
 
@@ -37,6 +50,7 @@ def _flatten(tree) -> dict[str, np.ndarray]:
 
 def save(directory: str, step: int, tree: Any, *, shard_id: int = 0) -> str:
     """Blocking save of this host's shard; atomic via rename."""
+    zstandard, msgpack = _require("zstandard"), _require("msgpack")
     d = os.path.join(directory, f"step_{step:08d}")
     os.makedirs(d, exist_ok=True)
     flat = _flatten(tree)
@@ -64,6 +78,7 @@ def restore(directory: str, step: int, like: Any, *, shard_id: int = 0) -> Any:
     """Restore into the structure (and dtypes) of ``like``. Shape/dtype
     mismatches raise — resharding after elastic re-mesh goes through
     ``fault_tolerance.reshard_like`` instead."""
+    zstandard, msgpack = _require("zstandard"), _require("msgpack")
     d = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(d, f"shard_{shard_id}.ckpt"), "rb") as f:
         payload = msgpack.unpackb(f.read(), raw=False)

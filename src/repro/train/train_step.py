@@ -8,7 +8,6 @@ PartitionSpecs from ``launch/mesh.py``.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp

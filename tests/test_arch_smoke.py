@@ -44,6 +44,7 @@ def test_forward_shapes_and_finite(arch, rng):
         assert "moe_balance_loss" in aux and np.isfinite(float(aux["moe_balance_loss"]))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_one_train_grad_step(arch, rng):
     cfg = get_config(f"{arch}-smoke")

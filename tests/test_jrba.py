@@ -2,7 +2,7 @@
 Eq. 15 feasibility, and the water-filling dominance property."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     Flow,
@@ -27,6 +27,7 @@ def _random_instance(seed: int, n_nodes: int = 8, n_flows: int = 4):
     return net, flows
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("seed", range(8))
 def test_jrba_close_to_brute_force(seed):
     net, flows = _random_instance(seed)
@@ -37,6 +38,7 @@ def test_jrba_close_to_brute_force(seed):
     assert res.span <= best * 1.20 + 1e-9  # rounding stays near-optimal
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("seed", range(4))
 def test_relaxation_lower_bounds_integral_optimum(seed):
     """LP relax optimum <= integral optimum; our MD solution upper-bounds the
@@ -99,6 +101,7 @@ def test_colocated_flows_return_none():
     assert jrba(net, [], k=3) is None
 
 
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(
     seed=st.integers(0, 10_000),

@@ -1,0 +1,127 @@
+"""Batched JRBA engine: batch results must match per-instance solves across
+scenario families, buckets must be stable, and the cache must actually hit."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Flow,
+    JRBAEngine,
+    build_program,
+    fat_tree,
+    hierarchical_edge_cloud,
+    jrba,
+    jrba_batch,
+    random_edge_network,
+    random_flow_sets as _flow_sets,
+    wan_mesh,
+)
+
+
+def _route_links(net, route):
+    return [net.link_id(u, v) for u, v in zip(route, route[1:])]
+
+
+NETS = {
+    "edge-mesh": lambda: random_edge_network(
+        10, mean_bandwidth=5.0, rng=np.random.RandomState(0)
+    ),
+    "edge-cloud": lambda: hierarchical_edge_cloud(8, 2, 1, rng=np.random.RandomState(1)),
+    "wan-mesh": lambda: wan_mesh(12, rng=np.random.RandomState(2)),
+    "fat-tree": lambda: fat_tree(4),
+}
+
+
+@pytest.mark.parametrize("family", sorted(NETS))
+def test_batch_matches_sequential(family):
+    """Acceptance: batched solves within 1% objective of per-instance jrba,
+    on >= 3 scenario families."""
+    net = NETS[family]()
+    sets = _flow_sets(net, n_instances=6, n_flows=4)
+    seq = [jrba(net, fs, k=3, n_iters=200) for fs in sets]
+    bat = jrba_batch(net, sets, k=3, n_iters=200)
+    assert len(bat) == len(seq)
+    for a, b in zip(seq, bat):
+        assert b is not None
+        # the rounded objective must agree within 1% (acceptance criterion);
+        # the *relaxation* value is an interior-point diagnostic and wobbles
+        # a few % across vmap lane counts (fp32 reduction-order chaos on the
+        # flat optimal face), so it only gets a loose sanity band
+        assert b.span == pytest.approx(a.span, rel=0.01)
+        assert b.relaxed_span == pytest.approx(a.relaxed_span, rel=0.15)
+        # batched bandwidths must be feasible and span-consistent
+        load = np.zeros(len(net.capacity))
+        for route, bw in zip(b.routes, b.bandwidth):
+            for l in _route_links(net, route):
+                load[l] += bw
+        assert np.all(load <= net.capacity * (1 + 1e-6))
+
+
+def test_batch_handles_mixed_sizes_and_empty_instances():
+    net = NETS["edge-mesh"]()
+    sets = _flow_sets(net, 2, 3) + [[]] + _flow_sets(net, 2, 10, seed=7)
+    sets.append([Flow(2, 2, 5.0)])  # colocated-only instance
+    eng = JRBAEngine(k=3, n_iters=150)
+    out = eng.solve_many(net, sets)
+    assert out[2] is None and out[-1] is None
+    for i in (0, 1, 3, 4):
+        assert out[i] is not None
+        assert len(out[i].routes) == len(sets[i])
+    # 3-flow and 10-flow instances land in different buckets -> 2 batch calls
+    assert eng.stats.batched_solves == 2
+    assert eng.stats.batched_instances == 4
+
+
+def test_bucket_sizes_are_pow2_and_cache_hits_on_reuse():
+    eng = JRBAEngine(min_bucket=8)
+    assert [eng.bucket(n) for n in (1, 8, 9, 16, 17, 100)] == [8, 8, 16, 16, 32, 128]
+    net = NETS["edge-mesh"]()
+    sets = _flow_sets(net, 4, 5)
+    eng = JRBAEngine(k=3, n_iters=100)
+    eng.solve_many(net, sets)
+    misses = eng.stats.cache_misses
+    assert misses >= 1 and eng.stats.cache_hits == 0
+    eng.solve_many(net, sets)
+    assert eng.stats.cache_misses == misses  # same bucket: no new compiles
+    assert eng.stats.cache_hits == 1
+
+
+def test_engine_single_solve_matches_jrba():
+    net = NETS["edge-cloud"]()
+    (flows,) = _flow_sets(net, 1, 5)
+    eng = JRBAEngine(k=3, n_iters=200)
+    a = eng.solve(net, flows)
+    b = jrba(net, flows, k=3, n_iters=200)
+    assert a.span == pytest.approx(b.span, rel=0.01)
+    assert eng.stats.single_solves == 1
+
+
+def test_per_instance_capacities():
+    """OTFS-style solves on residual capacity: tighter links must not be
+    exceeded by the batched path."""
+    net = NETS["edge-mesh"]()
+    sets = _flow_sets(net, 3, 4)
+    caps = [net.capacity * s for s in (1.0, 0.5, 0.25)]
+    out = JRBAEngine(k=3, n_iters=150).solve_many(net, sets, capacities=caps)
+    for res, cap in zip(out, caps):
+        sel_load = res.link_load
+        assert np.all(sel_load <= cap + 1e-6)
+
+
+def test_build_program_pad_to_validates():
+    net = NETS["edge-mesh"]()
+    (flows,) = _flow_sets(net, 1, 5)
+    prog = build_program(net, flows, k=3, pad_to=16)
+    assert prog.usage.shape[0] == 16 and prog.n_real == 5
+    with pytest.raises(ValueError):
+        build_program(net, flows, k=3, pad_to=2)
+
+
+def test_path_cache_reuse_is_transparent():
+    net = NETS["wan-mesh"]()
+    sets = _flow_sets(net, 2, 6, seed=3)
+    eng = JRBAEngine(k=3, n_iters=150)
+    first = [eng.solve(net, fs) for fs in sets]
+    second = [eng.solve(net, fs) for fs in sets]  # paths now come from cache
+    for a, b in zip(first, second):
+        assert a.span == pytest.approx(b.span)
+        assert a.routes == b.routes

@@ -12,7 +12,6 @@ from repro.core import (
     equal_share_bandwidth,
     fig2_instance,
     flows_from_assignment,
-    job_span,
     jrba,
     allocate_greedy,
     throughput,

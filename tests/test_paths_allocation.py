@@ -1,7 +1,7 @@
 """Path enumeration (Yen) and Algorithm 1 / baseline allocators."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     JobGraph,

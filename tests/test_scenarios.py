@@ -1,0 +1,113 @@
+"""Scenario generator invariants: every registry scenario must yield a
+connected capacitated network, DAG jobs pinned to compute-capable sources,
+and reproducible arrival processes."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    OnlineScheduler,
+    compute_nodes,
+    fat_tree,
+    get_scenario,
+    heterogeneous_mesh,
+    hierarchical_edge_cloud,
+    poisson_burst_arrivals,
+    scenario_names,
+    wan_mesh,
+)
+
+
+def _connected(net) -> bool:
+    seen = {0}
+    stack = [0]
+    while stack:
+        for v in net.neighbors(stack.pop()):
+            if v not in seen:
+                seen.add(v)
+                stack.append(v)
+    return len(seen) == net.n_nodes
+
+
+@pytest.mark.parametrize("name", scenario_names())
+@pytest.mark.parametrize("seed", [0, 3])
+def test_scenario_network_invariants(name, seed):
+    net, _ = get_scenario(name).build(seed=seed, n_jobs=3)
+    assert _connected(net)
+    assert np.all(net.capacity > 0)
+    assert np.all(net.power > 0)
+    assert np.all(net.mem_max >= 0)
+    assert len(compute_nodes(net)) >= 2  # somewhere to run jobs
+
+
+@pytest.mark.parametrize("name", scenario_names())
+def test_scenario_arrival_invariants(name):
+    net, arrivals = get_scenario(name).build(seed=1, n_jobs=6)
+    assert len(arrivals) == 6
+    times = [t for t, _, _ in arrivals]
+    assert all(t >= 0 for t in times)
+    assert times == sorted(times)
+    hosts = set(compute_nodes(net))
+    for _, job, units in arrivals:
+        assert units > 0
+        assert job.topological_order() is not None  # DAG-ness
+        pinned = [t.pinned_node for t in job.tasks if t.pinned_node is not None]
+        assert pinned and all(p in hosts for p in pinned)
+
+
+def test_scenarios_reproducible():
+    a = get_scenario("wan-mesh").build(seed=5, n_jobs=4)
+    b = get_scenario("wan-mesh").build(seed=5, n_jobs=4)
+    assert np.array_equal(a[0].capacity, b[0].capacity)
+    assert [t for t, _, _ in a[1]] == [t for t, _, _ in b[1]]
+
+
+def test_fat_tree_structure():
+    k = 4
+    net = fat_tree(k)
+    n_hosts = k**3 // 4
+    assert net.n_nodes == n_hosts + k * k + (k // 2) ** 2
+    # compute only at hosts; switches are transit
+    assert compute_nodes(net) == list(range(n_hosts))
+    assert np.all(net.mem_max[n_hosts:] == 0.0)
+    # every host has exactly one uplink
+    for h in range(n_hosts):
+        assert len(net.neighbors(h)) == 1
+    with pytest.raises(ValueError):
+        fat_tree(3)
+
+
+def test_hierarchy_tiers_have_increasing_power():
+    net = hierarchical_edge_cloud(8, 2, 1, rng=np.random.RandomState(0))
+    edge, agg, cloud = net.power[:8], net.power[8:10], net.power[10:]
+    assert edge.max() < agg.min() < cloud.min()
+
+
+def test_heterogeneity_spread_orders_variance():
+    lo = heterogeneous_mesh(24, spread=0.1, rng=np.random.RandomState(2))
+    hi = heterogeneous_mesh(24, spread=1.5, rng=np.random.RandomState(2))
+    assert np.log(hi.power).std() > np.log(lo.power).std() + 0.5
+
+
+def test_wan_mesh_connected_across_seeds():
+    for seed in range(5):
+        assert _connected(wan_mesh(14, rng=np.random.RandomState(seed)))
+
+
+def test_burst_arrivals_are_bursty():
+    """MMPP inter-arrival CV must exceed the Poisson CV of 1."""
+    rng = np.random.RandomState(0)
+    arr = poisson_burst_arrivals(200, 10, rng, lam_base=0.1, lam_burst=5.0)
+    gaps = np.diff([t for t, _, _ in arr])
+    assert np.all(gaps >= 0)
+    cv = gaps.std() / gaps.mean()
+    assert cv > 1.2
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", scenario_names())
+def test_scenarios_schedule_end_to_end(name):
+    """Every scenario runs through OTFA and finishes its jobs."""
+    net, arrivals = get_scenario(name).build(seed=2, n_jobs=4)
+    res = OnlineScheduler(net, "OTFA", k_paths=3, jrba_iters=100).run(arrivals)
+    assert res.n_scheduled == 4
+    assert res.unfinished == 0

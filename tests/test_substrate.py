@@ -1,12 +1,13 @@
 """Substrate tests: optimizer, compression, data pipeline, checkpointing,
 fault tolerance, and the train step end-to-end on a smoke config."""
+import importlib.util
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.data import DataConfig, Prefetcher, data_iterator, synthetic_batch
@@ -113,6 +114,10 @@ class TestData:
         it.close()
 
 
+@pytest.mark.skipif(
+    any(importlib.util.find_spec(m) is None for m in ("zstandard", "msgpack")),
+    reason="checkpointing needs the optional zstandard/msgpack deps",
+)
 class TestCheckpoint:
     def _tree(self):
         return {
@@ -180,6 +185,7 @@ class TestFaultTolerance:
         assert pol.skip_set() == set()
 
 
+@pytest.mark.slow
 class TestTrainStep:
     def test_loss_decreases_on_smoke_model(self):
         cfg = get_config("internlm2-1.8b-smoke")
