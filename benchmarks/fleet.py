@@ -1,9 +1,10 @@
-"""Fleet benchmark: scheduler throughput across the scenario suite, plus the
-batched-vs-sequential JRBA engine comparison. Emits ``BENCH_fleet.json``.
+"""Fleet benchmark: scheduler throughput across the scenario suite, the
+batched-vs-sequential JRBA engine comparison, and the co-scheduled fleet
+runtime vs back-to-back simulation runs. Emits ``BENCH_fleet.json``.
 
   PYTHONPATH=src python -m benchmarks.fleet [--smoke] [--out BENCH_fleet.json]
 
-Two sections:
+Three sections:
 
   * ``scenarios`` — for each registry scenario x policy: jobs scheduled per
     second of scheduler wall-clock, and simulator events per second (the
@@ -11,6 +12,11 @@ Two sections:
   * ``batch`` — N independent JRBA instances solved sequentially vs through
     ``JRBAEngine.solve_many``; records the solve-stage and end-to-end
     speedups and the max span deviation (must stay within 1%).
+  * ``cosched`` — a fleet of full simulations run through
+    ``repro.fleet.FleetRuntime`` (lockstep, solves batched across
+    simulations) vs the same simulations run back-to-back on a shared
+    engine; records total-wall-clock speedup, mean batch occupancy, and the
+    per-simulation span deviation (must stay within 1%).
 
 ``--smoke`` shrinks everything to a few events so CI can catch harness bitrot
 without measuring timings.
@@ -19,12 +25,13 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
 import numpy as np
 
-sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir, "src"))
 
 from repro.core import (  # noqa: E402
     JRBAEngine,
@@ -34,6 +41,7 @@ from repro.core import (  # noqa: E402
     random_edge_network,
     random_flow_sets,
 )
+from repro.fleet import FLEET_SCENARIOS, FleetRuntime, build_scenario_fleet  # noqa: E402
 
 BATCH_POLICIES = ("OTFS", "OTFA")
 
@@ -140,12 +148,80 @@ def bench_batch(*, smoke: bool, n_instances: int = 32, n_flows: int = 6) -> dict
     return out
 
 
+def bench_cosched(
+    *, smoke: bool, n_sims: int = 16, n_jobs: int = 4, trace_path: str | None = None
+) -> dict:
+    """Co-scheduled fleet vs the same simulations back-to-back. Both sides
+    share one engine per pass (the PR-1 status quo already shares caches);
+    the delta is purely lockstep cross-simulation solve batching."""
+    names = FLEET_SCENARIOS
+    if smoke:
+        # two families x two lanes: still exercises cross-sim batching
+        # (occupancy > 1) with a handful of events
+        n_sims, n_jobs, names = 4, 2, FLEET_SCENARIOS[:2]
+    n_iters = 60 if smoke else 250
+    k = 3
+
+    seq_engine = JRBAEngine(k=k, n_iters=n_iters)
+    if not smoke:  # warm the compile caches so timings compare steady state
+        for s in build_scenario_fleet(seq_engine, n_sims, n_jobs=n_jobs, names=names):
+            s.scheduler.run(s.arrivals)
+    t0 = time.perf_counter()
+    solo = [
+        s.scheduler.run(s.arrivals)
+        for s in build_scenario_fleet(seq_engine, n_sims, n_jobs=n_jobs, names=names)
+    ]
+    t_seq = time.perf_counter() - t0
+
+    fleet_engine = JRBAEngine(k=k, n_iters=n_iters)
+    runtime = FleetRuntime(fleet_engine)
+    if not smoke:
+        runtime.run(build_scenario_fleet(fleet_engine, n_sims, n_jobs=n_jobs, names=names))
+    fleet = runtime.run(
+        build_scenario_fleet(fleet_engine, n_sims, n_jobs=n_jobs, names=names)
+    )
+    t_cos = fleet.wall_seconds
+    if trace_path:
+        fleet.telemetry.to_jsonl(trace_path)
+
+    devs = []
+    for a, b in zip(solo, fleet.results):
+        assert a.n_scheduled == b.n_scheduled, "fleet diverged from solo schedules"
+        if np.isfinite(a.avg_scheduled_span):
+            devs.append(
+                abs(a.avg_scheduled_span - b.avg_scheduled_span) / a.avg_scheduled_span
+            )
+    out = {
+        "n_sims": n_sims,
+        "n_jobs": n_jobs,
+        "n_iters": n_iters,
+        "scenarios": sorted(set(names[: max(n_sims, 1)])),
+        "max_span_rel_dev": max(devs) if devs else 0.0,
+        "seq_seconds": t_seq,
+        "cosched_seconds": t_cos,
+        "speedup_wall_clock": t_seq / t_cos if t_cos else None,
+        "mean_batch_occupancy": fleet.telemetry.mean_batch_occupancy,
+        "cache_hit_rate": fleet.telemetry.cache_hit_rate,
+        "events_per_s": fleet.telemetry.summary.get("events_per_s"),
+        "dispatch_rounds": len(fleet.telemetry.rounds),
+        "engine": fleet_engine.stats.as_dict(),
+    }
+    print(
+        f"cosched[{n_sims} sims x {n_jobs} jobs] dev={out['max_span_rel_dev']:.2e} "
+        f"occupancy={out['mean_batch_occupancy']:.2f} "
+        f"wall {t_seq * 1e3:.0f}ms->{t_cos * 1e3:.0f}ms "
+        f"({out['speedup_wall_clock']:.2f}x)"
+    )
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="tiny run, no timing claims")
     ap.add_argument("--out", default="BENCH_fleet.json")
     args = ap.parse_args()
 
+    trace_path = os.path.splitext(args.out)[0] + "_trace.jsonl"
     n_jobs, seeds = (3, 1) if args.smoke else (8, 2)
     report = {
         "smoke": args.smoke,
@@ -153,15 +229,26 @@ def main() -> None:
         "batch": bench_batch(
             smoke=args.smoke, n_instances=8 if args.smoke else 32
         ),
+        "cosched": bench_cosched(smoke=args.smoke, trace_path=trace_path),
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
-    print(f"wrote {args.out}")
+    print(f"wrote {args.out} (+ {trace_path})")
     if not args.smoke:
         dev = report["batch"]["max_span_rel_dev"]
         speedup = report["batch"]["speedup_solve_stage"]
         assert dev <= 0.01, f"batched span deviates {dev:.3%} from sequential"
         assert speedup >= 5.0, f"batch solve speedup {speedup:.1f}x < 5x"
+        cos = report["cosched"]
+        assert cos["max_span_rel_dev"] <= 0.01, (
+            f"co-scheduled spans deviate {cos['max_span_rel_dev']:.3%} from solo runs"
+        )
+        assert cos["mean_batch_occupancy"] > 1.0, (
+            f"no cross-simulation batching (occupancy {cos['mean_batch_occupancy']:.2f})"
+        )
+        assert cos["speedup_wall_clock"] > 1.0, (
+            f"co-scheduling slower than sequential ({cos['speedup_wall_clock']:.2f}x)"
+        )
 
 
 if __name__ == "__main__":

@@ -8,9 +8,10 @@ Prints ``name,us_per_call,derived`` CSV (plus derived claim checks).
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 
-sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir, "src"))
 
 
 def main() -> None:

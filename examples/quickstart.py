@@ -2,9 +2,10 @@
 
   PYTHONPATH=src python examples/quickstart.py
 """
+import os
 import sys
 
-sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir, "src"))
 
 import numpy as np
 

@@ -8,9 +8,10 @@ continuous-batching engine then serves requests for the placed model.
 
   PYTHONPATH=src python examples/serve_cluster.py
 """
+import os
 import sys
 
-sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir, "src"))
 
 import jax
 import numpy as np

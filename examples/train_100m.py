@@ -8,9 +8,10 @@ for a few hundred steps on synthetic data, with checkpoint/resume.
 checkpointing, and data pipeline are identical.)
 """
 import argparse
+import os
 import sys
 
-sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir, "src"))
 
 from repro.configs import Block, ModelConfig, register
 from repro.launch.train import main as train_main

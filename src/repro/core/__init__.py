@@ -29,7 +29,7 @@ from .jrba import (
     solve_relaxation_batch,
     water_fill,
 )
-from .online import POLICIES, JobRecord, OnlineScheduler, SimResult
+from .online import POLICIES, JobRecord, OnlineScheduler, SimResult, SolveRequest
 from .paths import avg_path_bandwidth, dijkstra, k_shortest_paths, path_links
 from .profiler import TPU_V5E, JobProfile, NodeClass, profile_job, profile_on_network
 from .scenarios import (
@@ -68,6 +68,7 @@ __all__ = [
     "SCENARIOS",
     "Scenario",
     "SimResult",
+    "SolveRequest",
     "Task",
     "TPU_V5E",
     "allocate_greedy",

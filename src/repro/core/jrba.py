@@ -23,6 +23,7 @@ import functools
 import itertools
 import time
 import weakref
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -477,44 +478,74 @@ class JRBAEngine:
 
     def solve_many(
         self,
-        net: NetworkGraph,
+        net: NetworkGraph | Sequence[NetworkGraph],
         flow_sets: list[list[Flow]],
         *,
         capacities: list[np.ndarray] | None = None,
-        water_filling: bool = False,
+        water_filling: bool | Sequence[bool] = False,
         refine: bool = True,
     ) -> list[JRBAResult | None]:
-        """Solve N independent JRBA instances; same-bucket instances share one
+        """Solve N independent JRBA instances; same-shape instances share one
         vmapped compiled call. Result list aligns with ``flow_sets`` (None for
-        empty/colocated-only instances)."""
+        empty/colocated-only instances).
+
+        ``net`` may be a single network or one per instance — the fleet
+        co-scheduling path, where every simulation owns its own topology.
+        Network identity only matters host-side (path enumeration and the
+        per-net path cache); the compiled relaxation sees pure tensors, so
+        programs from *different* networks batch together whenever they land
+        in the same (Nf, K, L) shape bucket. Different topologies have
+        different link counts L and thus separate buckets automatically.
+
+        ``water_filling`` may likewise be per-instance (rounding and the
+        top-up are host-side, so mixed fleets of ``…+WF`` and plain policies
+        share one batched solve).
+
+        The batch dimension is padded up to a power of two (repeating the
+        last program; padded lanes are discarded) so a draining fleet —
+        16 live simulations, then 15, then 14… — reuses O(log N) compiled
+        batch shapes instead of recompiling the vmapped solver per size.
+        """
+        n = len(flow_sets)
+        nets = [net] * n if isinstance(net, NetworkGraph) else list(net)
+        if len(nets) != n:
+            raise ValueError(f"nets ({len(nets)}) must align with flow_sets ({n})")
+        wf = [water_filling] * n if isinstance(water_filling, bool) else list(water_filling)
+        if len(wf) != n:
+            raise ValueError(f"water_filling ({len(wf)}) must align with flow_sets ({n})")
         if capacities is None:
-            capacities = [None] * len(flow_sets)
-        elif len(capacities) != len(flow_sets):
+            capacities = [None] * n
+        elif len(capacities) != n:
             raise ValueError(
-                f"capacities ({len(capacities)}) must align with flow_sets "
-                f"({len(flow_sets)})"
+                f"capacities ({len(capacities)}) must align with flow_sets ({n})"
             )
         progs: list[FlowProgram | None] = [
-            self.build(net, fs, capacity=cap) for fs, cap in zip(flow_sets, capacities)
+            self.build(g, fs, capacity=cap)
+            for g, fs, cap in zip(nets, flow_sets, capacities)
         ]
-        results: list[JRBAResult | None] = [None] * len(flow_sets)
+        results: list[JRBAResult | None] = [None] * n
         by_bucket: dict[tuple, list[int]] = {}
         for i, p in enumerate(progs):
             if p is not None:
                 by_bucket.setdefault(p.usage.shape, []).append(i)
         for shape, idxs in by_bucket.items():
             group = [progs[i] for i in idxs]
+            b_pad = 1
+            while b_pad < len(group):
+                b_pad *= 2
             # the jitted batch solver specializes on B too, so the cache key
-            # must include the group size or stats would claim false hits
-            self._note_shape(("batch", len(group), shape, self.n_iters))
+            # must include the (padded) batch size or stats would claim false
+            # hits; padding keeps the set of B values seen logarithmic
+            self._note_shape(("batch", b_pad, shape, self.n_iters))
+            padded = group + [group[-1]] * (b_pad - len(group))
             t0 = time.perf_counter()
-            solved = solve_relaxation_batch(group, n_iters=self.n_iters)
+            solved = solve_relaxation_batch(padded, n_iters=self.n_iters)[: len(group)]
             self.stats.solve_seconds += time.perf_counter() - t0
             self.stats.batched_solves += 1
             self.stats.batched_instances += len(group)
             for i, prog, (m, relaxed) in zip(idxs, group, solved):
                 results[i] = _finalize(
-                    prog, m, relaxed, water_filling=water_filling, refine=refine
+                    prog, m, relaxed, water_filling=wf[i], refine=refine
                 )
         return results
 

@@ -21,7 +21,9 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 import time
+from typing import Generator
 
 import numpy as np
 
@@ -34,10 +36,10 @@ from .allocation import (
     job_span,
 )
 from .graph import Flow, JobGraph, NetworkGraph
-from .jrba import JRBAEngine
+from .jrba import JRBAEngine, JRBAResult
 from .paths import path_links
 
-__all__ = ["JobRecord", "SimResult", "OnlineScheduler", "POLICIES"]
+__all__ = ["JobRecord", "SimResult", "SolveRequest", "OnlineScheduler", "POLICIES"]
 
 POLICIES = ("LR", "BR", "TP", "OTFS", "OTFA", "OTFS+WF", "OTFA+WF")
 
@@ -107,6 +109,29 @@ class SimResult:
         return float(np.mean(s)) if s else float("inf")
 
 
+@dataclasses.dataclass
+class SolveRequest:
+    """A pending JRBA solve surfaced by :meth:`OnlineScheduler.step`.
+
+    The stepper suspends wherever the event loop needs a JRBA solution and
+    yields one of these; the driver answers via ``gen.send((result, seconds))``
+    where ``result`` is a :class:`JRBAResult` (``None`` for empty programs)
+    and ``seconds`` is the solver wall-clock to attribute to this
+    simulation's ``sched_overhead``. :meth:`OnlineScheduler.run` answers each
+    request inline through the scheduler's own engine;
+    ``repro.fleet.FleetRuntime`` instead collects one request per live
+    simulation and answers them all through a single batched
+    :meth:`JRBAEngine.solve_many` call."""
+
+    net: NetworkGraph
+    flows: list[Flow]
+    capacity: np.ndarray  # residual (OTFS) or full (OTFA) link capacity
+    water_filling: bool = False
+
+
+SolveReply = tuple[JRBAResult | None, float]  # (solution, solver wall-clock)
+
+
 class OnlineScheduler:
     """Event-driven simulator: arrivals and completions trigger scheduling
     rounds (the paper schedules periodically; event-driven rounds are the
@@ -152,6 +177,37 @@ class OnlineScheduler:
         *,
         max_time: float = 1e6,
     ) -> SimResult:
+        """Drive :meth:`step` to completion, answering every
+        :class:`SolveRequest` inline through the scheduler's own engine —
+        byte-for-byte the pre-stepper behaviour (same solves, same order)."""
+        stepper = self.step(arrivals, max_time=max_time)
+        try:
+            req = next(stepper)
+            while True:
+                t0 = time.perf_counter()
+                res = self.engine.solve(
+                    req.net,
+                    req.flows,
+                    capacity=req.capacity,
+                    water_filling=req.water_filling,
+                )
+                req = stepper.send((res, time.perf_counter() - t0))
+        except StopIteration as stop:
+            return stop.value
+
+    def step(
+        self,
+        arrivals: list[tuple[float, JobGraph, float]],  # (time, job, total_units)
+        *,
+        max_time: float = 1e6,
+    ) -> Generator[SolveRequest, SolveReply, SimResult]:
+        """Resumable event loop: a generator that yields a
+        :class:`SolveRequest` at every point the simulation needs a JRBA
+        solution and expects ``(JRBAResult | None, solve_seconds)`` back via
+        ``send``. Returns the :class:`SimResult` as the generator's value
+        (``StopIteration.value``). This is the unit the fleet runtime
+        co-schedules: N steppers advanced in lockstep batch their solves
+        through one compiled call."""
         net = self.net
         net.reset_residual()
         records = [
@@ -206,8 +262,10 @@ class OnlineScheduler:
                     r.span = job_span(net, r.alloc, r.flows, r.bandwidths)
                     set_finish_event(r, now)
 
-        def refresh_otfa(now: float) -> None:
-            """OTFA (Algo 4 lines 13-15): JRBA over all flows, full capacity."""
+        def refresh_otfa(now: float):
+            """OTFA (Algo 4 lines 13-15): JRBA over all flows, full capacity.
+            A sub-generator: the solve itself is yielded to the driver."""
+            nonlocal sched_overhead
             all_flows = [f for r in q_run for f in r.flows]
             if not all_flows:
                 for r in q_run:
@@ -215,12 +273,8 @@ class OnlineScheduler:
                         r.span = job_span(net, r.alloc, r.flows, np.zeros(0))
                         set_finish_event(r, now)
                 return
-            res = self.engine.solve(
-                net,
-                all_flows,
-                capacity=net.capacity,
-                water_filling=self.water_fill,
-            )
+            res, dt = yield SolveRequest(net, all_flows, net.capacity, self.water_fill)
+            sched_overhead += dt
             lookup = {id(f): (b, route) for f, b, route in zip(res.flows, res.bandwidth, res.routes)}
             for r in q_run:
                 r.bandwidths = np.array([lookup[id(f)][0] for f in r.flows])
@@ -229,7 +283,10 @@ class OnlineScheduler:
                 set_finish_event(r, now)
             net.residual = np.maximum(net.capacity - res.link_load, 0.0)
 
-        def schedule_round(now: float) -> None:
+        def schedule_round(now: float):
+            """Sub-generator: OTFS solves (one per waiting job — each consumes
+            residual capacity, so they stay sequential within a round) and the
+            OTFA refresh are yielded to the driver."""
             nonlocal sched_overhead
             q_wait.sort(key=lambda r: -(now - r.submit_time))  # Algo 3/4 line 9
             newly: list[JobRecord] = []
@@ -241,14 +298,8 @@ class OnlineScheduler:
                 if not alloc.feasible:
                     continue
                 if self.base == "OTFS":
-                    t0 = time.perf_counter()
-                    res = self.engine.solve(
-                        net,
-                        flows,
-                        capacity=net.residual,
-                        water_filling=self.water_fill,
-                    )
-                    sched_overhead += time.perf_counter() - t0
+                    res, dt = yield SolveRequest(net, flows, net.residual, self.water_fill)
+                    sched_overhead += dt
                     bandwidths = np.zeros(0) if res is None else res.bandwidth
                     span = job_span(net, alloc, flows, bandwidths)
                     if not np.isfinite(span) or span > self.max_acceptable_span:
@@ -273,9 +324,7 @@ class OnlineScheduler:
             if self.base in ("LR", "BR", "TP") and newly:
                 refresh_equal_share(now)
             elif self.base == "OTFA" and newly:
-                t0 = time.perf_counter()
-                refresh_otfa(now)
-                sched_overhead += time.perf_counter() - t0
+                yield from refresh_otfa(now)
             for r in newly:
                 r.initial_span = r.span
 
@@ -288,7 +337,12 @@ class OnlineScheduler:
             n_events += 1
             r = by_id[jid]
             if kind == "finish":
-                if r not in q_run or abs(r.finish_time - now) > 1e-9:
+                # relative tolerance: event times are O(now), so an absolute
+                # epsilon would misclassify fp-noise-level differences once
+                # simulated time grows large (late-submitted jobs at t ~ 1e9)
+                if r not in q_run or not math.isclose(
+                    r.finish_time, now, rel_tol=1e-9, abs_tol=1e-9
+                ):
                     continue  # stale event (span changed after this was queued)
                 advance_running(now)
                 q_run.remove(r)
@@ -301,12 +355,12 @@ class OnlineScheduler:
                 if self.base in ("LR", "BR", "TP"):
                     refresh_equal_share(now)
                 elif self.base == "OTFA":
-                    refresh_otfa(now)
+                    yield from refresh_otfa(now)
                 else:  # OTFS
                     rebuild_residual_from_running()
             else:  # arrival
                 advance_running(now)
                 q_wait.append(r)
-            schedule_round(now)
+            yield from schedule_round(now)
         unfinished = sum(1 for r in records if not r.done)
         return SimResult(records, sched_overhead, unfinished, n_events)

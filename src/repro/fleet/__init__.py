@@ -1,0 +1,26 @@
+"""Fleet co-scheduling: run many independent online-scheduling simulations
+in lockstep and batch their JRBA solves through one shared, compiled engine.
+
+Entry point: build one :class:`FleetSim` per simulation (all schedulers
+sharing one :class:`~repro.core.JRBAEngine`), then ``FleetRuntime().run(sims)``.
+See ``examples/fleet_demo.py`` and the ``cosched`` section of
+``benchmarks/fleet.py``.
+"""
+from .runtime import (
+    FLEET_SCENARIOS,
+    FleetResult,
+    FleetRuntime,
+    FleetSim,
+    build_scenario_fleet,
+)
+from .telemetry import FleetTelemetry, RoundRecord
+
+__all__ = [
+    "FLEET_SCENARIOS",
+    "FleetResult",
+    "FleetRuntime",
+    "FleetSim",
+    "FleetTelemetry",
+    "RoundRecord",
+    "build_scenario_fleet",
+]

@@ -1,0 +1,209 @@
+"""Fleet co-scheduling runtime: N independent online-scheduling simulations
+advanced in lockstep so their per-event JRBA solves batch into single
+compiled calls.
+
+A single :class:`~repro.core.OnlineScheduler` run solves its JRBA instances
+one at a time — each solve is a tiny tensor program whose dispatch overhead
+dwarfs its FLOPs, so the vmapped batch solver sits idle exactly where fleet
+traffic needs it. The runtime exploits that the simulations are *mutually
+independent* (each owns its topology and arrival trace): it drives every
+simulation's resumable stepper (:meth:`OnlineScheduler.step`) to its next
+pending :class:`~repro.core.SolveRequest`, stacks all pending requests
+through the extended :meth:`JRBAEngine.solve_many` (which batches across
+networks by shape bucket), and resumes each simulation with its own result.
+Simulated clocks advance independently — lockstep is over *solve rounds*,
+not simulated time, which is sound precisely because no state is shared.
+
+This is the orchestrator-level analogue of Oakestra's root/cluster split and
+KCES's cloud-edge pooling: one control plane multiplexing many edge
+clusters' scheduling decisions through shared compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Generator
+
+from ..core.graph import JobGraph
+from ..core.jrba import JRBAEngine
+from ..core.online import OnlineScheduler, SimResult, SolveRequest
+from ..core.scenarios import SCENARIOS
+from .telemetry import FleetTelemetry, RoundRecord
+
+__all__ = [
+    "FLEET_SCENARIOS",
+    "FleetSim",
+    "FleetResult",
+    "FleetRuntime",
+    "build_scenario_fleet",
+]
+
+Arrivals = list[tuple[float, JobGraph, float]]
+
+# default families for fleet experiments: all have seed-independent link
+# counts, so lanes from the same family share (Nf, K, L) shape buckets and
+# actually batch (wan-mesh's L varies per seed — every lane would sit in a
+# private bucket and misrepresent co-scheduling)
+FLEET_SCENARIOS = ("edge-mesh", "edge-cloud", "fat-tree", "hetero-low")
+
+
+@dataclasses.dataclass
+class FleetSim:
+    """One lane of the fleet: a scheduler plus its arrival trace. ``name``
+    groups lanes in telemetry (e.g. the scenario that generated them)."""
+
+    scheduler: OnlineScheduler
+    arrivals: Arrivals
+    name: str = ""
+    max_time: float = 1e6
+
+
+def build_scenario_fleet(
+    engine: JRBAEngine,
+    n_sims: int,
+    *,
+    n_jobs: int = 4,
+    names: tuple[str, ...] = FLEET_SCENARIOS,
+    seed0: int = 0,
+) -> list[FleetSim]:
+    """One :class:`FleetSim` per lane: lane ``i`` runs scenario
+    ``names[i % len(names)]`` with seed ``seed0 + i``, alternating OTFA/OTFS,
+    all schedulers sharing ``engine``. Shared by the ``cosched`` benchmark,
+    the demo, and the equivalence tests — call it once per run so every lane
+    owns a fresh topology and no mutable network state leaks between a fleet
+    pass and its back-to-back baseline."""
+    sims = []
+    for i in range(n_sims):
+        name = names[i % len(names)]
+        policy = "OTFS" if i % 2 else "OTFA"
+        net, arrivals = SCENARIOS[name].build(seed=seed0 + i, n_jobs=n_jobs)
+        sched = OnlineScheduler(
+            net, policy, k_paths=engine.k, jrba_iters=engine.n_iters, engine=engine
+        )
+        sims.append(FleetSim(sched, arrivals, name=f"{name}/{policy}"))
+    return sims
+
+
+@dataclasses.dataclass
+class _Lane:
+    """Runtime state of one simulation stepper."""
+
+    sim: FleetSim
+    gen: Generator[SolveRequest, tuple, SimResult]
+    pending: SolveRequest | None = None
+    result: SimResult | None = None
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """Per-simulation results (aligned with the ``sims`` argument) plus the
+    co-scheduling telemetry."""
+
+    results: list[SimResult]
+    telemetry: FleetTelemetry
+    wall_seconds: float
+
+    @property
+    def total_events(self) -> int:
+        return sum(r.n_events for r in self.results)
+
+    @property
+    def unfinished(self) -> int:
+        return sum(r.unfinished for r in self.results)
+
+
+class FleetRuntime:
+    """Lockstep multi-simulation driver over one shared :class:`JRBAEngine`.
+
+    Every round: collect one pending solve per live simulation, dispatch them
+    all through ``solve_many`` (same-shape instances share a compiled vmapped
+    call; solver wall-clock is amortized evenly across the round's requests
+    for per-sim ``sched_overhead`` accounting), resume each stepper with its
+    result, and record telemetry. Simulations drop out as they finish; the
+    engine's batch-dimension padding keeps the draining fleet on O(log N)
+    compiled batch shapes.
+    """
+
+    def __init__(self, engine: JRBAEngine | None = None) -> None:
+        self.engine = engine
+
+    def run(self, sims: list[FleetSim]) -> FleetResult:
+        if not sims:
+            raise ValueError("empty fleet")
+        engine = self.engine or sims[0].scheduler.engine
+        for s in sims:
+            if (s.scheduler.k_paths, s.scheduler.jrba_iters) != (engine.k, engine.n_iters):
+                raise ValueError(
+                    f"fleet sim {s.name!r} has engine hyperparameters "
+                    f"(k={s.scheduler.k_paths}, n_iters={s.scheduler.jrba_iters}) "
+                    f"!= shared engine (k={engine.k}, n_iters={engine.n_iters}); "
+                    "co-scheduled solves would diverge from standalone runs"
+                )
+        telemetry = FleetTelemetry()
+        # snapshot so telemetry reports THIS run's cache behaviour even when
+        # the engine was warmed by earlier runs (the benchmark's
+        # warm-then-measure pattern)
+        hits0, misses0 = engine.stats.cache_hits, engine.stats.cache_misses
+        t_start = time.perf_counter()
+        lanes = [
+            _Lane(sim=s, gen=s.scheduler.step(s.arrivals, max_time=s.max_time))
+            for s in sims
+        ]
+        for lane in lanes:  # prime: advance to the first solve (or completion)
+            self._advance(lane, None)
+        round_idx = 0
+        while True:
+            live = [ln for ln in lanes if ln.result is None]
+            if not live:
+                break
+            reqs = [ln.pending for ln in live]
+            stats = engine.stats
+            calls0, inst0, solve0 = (
+                stats.batched_solves,
+                stats.batched_instances,
+                stats.solve_seconds,
+            )
+            t0 = time.perf_counter()
+            outs = engine.solve_many(
+                [r.net for r in reqs],
+                [r.flows for r in reqs],
+                capacities=[r.capacity for r in reqs],
+                water_filling=[r.water_filling for r in reqs],
+            )
+            dispatch_seconds = time.perf_counter() - t0
+            per_req = dispatch_seconds / len(reqs)
+            for lane, res in zip(live, outs):
+                self._advance(lane, (res, per_req))
+            batch_calls = stats.batched_solves - calls0
+            telemetry.record_round(
+                RoundRecord(
+                    round=round_idx,
+                    n_live=len(live),
+                    n_requests=len(reqs),
+                    batch_calls=batch_calls,
+                    batch_occupancy=(
+                        (stats.batched_instances - inst0) / batch_calls
+                        if batch_calls
+                        else 0.0
+                    ),
+                    solve_seconds=stats.solve_seconds - solve0,
+                    dispatch_seconds=dispatch_seconds,
+                    cache_hits=stats.cache_hits - hits0,
+                    cache_misses=stats.cache_misses - misses0,
+                )
+            )
+            round_idx += 1
+        wall = time.perf_counter() - t_start
+        results = [ln.result for ln in lanes]
+        telemetry.finalize(
+            names=[s.name for s in sims], results=results, wall_seconds=wall
+        )
+        return FleetResult(results=results, telemetry=telemetry, wall_seconds=wall)
+
+    @staticmethod
+    def _advance(lane: _Lane, reply: tuple | None) -> None:
+        """Resume a stepper until its next solve request or completion."""
+        try:
+            lane.pending = lane.gen.send(reply)
+        except StopIteration as stop:
+            lane.pending, lane.result = None, stop.value

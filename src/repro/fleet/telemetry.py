@@ -1,0 +1,124 @@
+"""Fleet telemetry: per-dispatch-round metrics and a JSON-lines trace.
+
+Every lockstep round the runtime records how well cross-simulation batching
+worked (requests in flight, compiled batch calls, occupancy), what the solver
+cost, and where the compile cache stands (`EngineStats` hits/misses). On
+completion a summary aggregates simulator throughput (events/sec) and
+per-scenario job throughput. ``to_jsonl`` dumps the whole trace — one round
+per line plus a terminal summary line — for offline analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard for type hints only
+    from ..core.online import SimResult
+
+__all__ = ["RoundRecord", "FleetTelemetry"]
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    """One lockstep dispatch round of the fleet runtime."""
+
+    round: int
+    n_live: int  # simulations still running when the round started
+    n_requests: int  # SolveRequests collected (== n_live by construction)
+    batch_calls: int  # compiled batch dispatches this round (shape groups)
+    # batched instances per compiled call — >1 means real batching. Can be
+    # less than n_requests / batch_calls: empty-program requests (idle lanes
+    # with no real flows) never join a batch
+    batch_occupancy: float
+    solve_seconds: float  # solver time inside the engine this round
+    dispatch_seconds: float  # wall-clock of the whole solve_many call
+    # cumulative EngineStats counters for THIS run: deltas from the engine's
+    # state when FleetRuntime.run began, so a pre-warmed engine doesn't
+    # contaminate the measured run's hit rate
+    cache_hits: int
+    cache_misses: int
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class FleetTelemetry:
+    """Accumulates :class:`RoundRecord` rows plus a completion summary."""
+
+    def __init__(self) -> None:
+        self.rounds: list[RoundRecord] = []
+        self.summary: dict = {}
+
+    # -- recording -----------------------------------------------------------
+    def record_round(self, record: RoundRecord) -> None:
+        self.rounds.append(record)
+
+    def finalize(
+        self,
+        *,
+        names: list[str],
+        results: "list[SimResult]",
+        wall_seconds: float,
+    ) -> dict:
+        """Aggregate per-scenario throughput and fleet-level rates. ``names``
+        groups simulations (several fleet lanes may share one scenario name)."""
+        total_events = sum(r.n_events for r in results)
+        by_name: dict[str, list] = {}
+        for name, res in zip(names, results):
+            by_name.setdefault(name or "sim", []).append(res)
+        self.summary = {
+            "n_sims": len(results),
+            "n_rounds": len(self.rounds),
+            "n_requests": sum(r.n_requests for r in self.rounds),
+            "batch_calls": sum(r.batch_calls for r in self.rounds),
+            "mean_batch_occupancy": self.mean_batch_occupancy,
+            "cache_hit_rate": self.cache_hit_rate,
+            "solve_seconds": sum(r.solve_seconds for r in self.rounds),
+            "wall_seconds": wall_seconds,
+            "events": total_events,
+            "events_per_s": total_events / wall_seconds if wall_seconds else None,
+            "unfinished": sum(r.unfinished for r in results),
+            "scenarios": {
+                name: {
+                    "sims": len(group),
+                    "jobs_scheduled": sum(r.n_scheduled for r in group),
+                    "avg_throughput": float(np.mean([r.avg_throughput for r in group])),
+                    "avg_scheduled_span": float(
+                        np.mean([r.avg_scheduled_span for r in group])
+                    ),
+                    "events": sum(r.n_events for r in group),
+                }
+                for name, group in sorted(by_name.items())
+            },
+        }
+        return self.summary
+
+    # -- derived metrics ------------------------------------------------------
+    @property
+    def mean_batch_occupancy(self) -> float:
+        """Instances per compiled batch call, over the whole run. The whole
+        point of co-scheduling: >1 means independent simulations actually
+        shared compiled solves."""
+        calls = sum(r.batch_calls for r in self.rounds)
+        instances = sum(r.batch_occupancy * r.batch_calls for r in self.rounds)
+        return instances / calls if calls else 0.0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        if not self.rounds:
+            return 0.0
+        last = self.rounds[-1]
+        total = last.cache_hits + last.cache_misses
+        return last.cache_hits / total if total else 0.0
+
+    # -- export ---------------------------------------------------------------
+    def to_jsonl(self, path: str) -> None:
+        """One ``{"type": "round", ...}`` line per dispatch round, then a
+        final ``{"type": "summary", ...}`` line."""
+        with open(path, "w") as f:
+            for r in self.rounds:
+                f.write(json.dumps({"type": "round", **r.as_dict()}) + "\n")
+            f.write(json.dumps({"type": "summary", **self.summary}) + "\n")

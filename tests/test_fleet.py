@@ -1,0 +1,201 @@
+"""Fleet co-scheduling runtime: lockstep batching must reproduce independent
+``OnlineScheduler.run`` results while actually sharing compiled solves, and
+the stepper/solve_many extensions it rests on must hold on their own."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    JRBAEngine,
+    OnlineScheduler,
+    SCENARIOS,
+    SolveRequest,
+    random_edge_network,
+    random_flow_sets,
+)
+from repro.fleet import (
+    FLEET_SCENARIOS,
+    FleetRuntime,
+    FleetSim,
+    build_scenario_fleet,
+)
+
+
+def _build_fleet(n_sims, *, engine, n_jobs=3):
+    """Rebuilds nets/arrivals from scratch each call so fleet and independent
+    runs never share mutable network state."""
+    return build_scenario_fleet(engine, n_sims, n_jobs=n_jobs)
+
+
+def _span_devs(fleet_results, independent_results):
+    devs = []
+    for a, b in zip(independent_results, fleet_results):
+        assert a.n_scheduled == b.n_scheduled
+        assert a.unfinished == b.unfinished
+        for ra, rb in zip(a.records, b.records):
+            assert ra.scheduled == rb.scheduled
+        if np.isfinite(a.avg_scheduled_span):
+            devs.append(
+                abs(a.avg_scheduled_span - b.avg_scheduled_span)
+                / a.avg_scheduled_span
+            )
+    return devs
+
+
+def _run_equivalence(n_sims, n_jobs, n_iters):
+    shared = JRBAEngine(k=3, n_iters=n_iters)
+    fleet = FleetRuntime(shared).run(
+        _build_fleet(n_sims, engine=shared, n_jobs=n_jobs)
+    )
+    # independent baseline: same hyperparameters, separate shared engine
+    # (PR-1 status quo: caches shared, solves sequential)
+    solo_engine = JRBAEngine(k=3, n_iters=n_iters)
+    solo = [
+        s.scheduler.run(s.arrivals)
+        for s in _build_fleet(n_sims, engine=solo_engine, n_jobs=n_jobs)
+    ]
+    return fleet, solo
+
+
+def test_fleet_matches_independent_runs():
+    fleet, solo = _run_equivalence(n_sims=8, n_jobs=3, n_iters=120)
+    devs = _span_devs(fleet.results, solo)
+    assert max(devs) <= 0.01
+    # cross-simulation batching must actually have occurred
+    assert fleet.telemetry.mean_batch_occupancy > 1.0
+    assert fleet.unfinished == sum(r.unfinished for r in solo)
+
+
+@pytest.mark.slow
+def test_fleet_acceptance_16_sims():
+    """Acceptance criterion: >= 16 sims across >= 3 registry scenarios, both
+    OTFS and OTFA, 1% span deviation, mean batch occupancy > 1."""
+    fleet, solo = _run_equivalence(n_sims=16, n_jobs=4, n_iters=150)
+    assert max(_span_devs(fleet.results, solo)) <= 0.01
+    assert fleet.telemetry.mean_batch_occupancy > 1.0
+
+
+def test_fleet_telemetry_trace(tmp_path):
+    import json
+
+    shared = JRBAEngine(k=3, n_iters=80)
+    fleet = FleetRuntime(shared).run(_build_fleet(4, engine=shared, n_jobs=2))
+    path = tmp_path / "trace.jsonl"
+    fleet.telemetry.to_jsonl(str(path))
+    lines = [json.loads(line) for line in path.read_text().splitlines()]
+    assert [line["type"] for line in lines[:-1]] == ["round"] * (len(lines) - 1)
+    assert lines[-1]["type"] == "summary"
+    assert lines[-1]["n_sims"] == 4
+    assert lines[-1]["events"] == fleet.total_events
+    # per-scenario throughput groups by FleetSim.name
+    assert set(lines[-1]["scenarios"]) == {f"{n}/{p}" for n, p in
+                                           zip(FLEET_SCENARIOS, ["OTFA", "OTFS"] * 2)}
+    for rec in lines[:-1]:
+        assert rec["n_requests"] >= rec["batch_calls"] >= 0
+
+
+def test_fleet_rejects_mismatched_hyperparameters():
+    shared = JRBAEngine(k=3, n_iters=100)
+    sims = _build_fleet(2, engine=shared, n_jobs=2)
+    rogue_net, rogue_arr = SCENARIOS["edge-mesh"].build(seed=9, n_jobs=2)
+    sims.append(
+        FleetSim(OnlineScheduler(rogue_net, "OTFA", jrba_iters=50), rogue_arr)
+    )
+    with pytest.raises(ValueError, match="hyperparameters"):
+        FleetRuntime(shared).run(sims)
+
+
+# ---------------------------------------------------------------------------
+# solve_many across heterogeneous networks (the engine-level extension)
+# ---------------------------------------------------------------------------
+def test_solve_many_across_networks():
+    """Programs from *different* topologies with equal link counts must share
+    one compiled batch call and still match per-network solves."""
+    nets = [
+        random_edge_network(12, mean_bandwidth=4.0, rng=np.random.RandomState(s))
+        for s in (0, 1, 2, 3)
+    ]
+    assert len({len(n.links) for n in nets}) == 1  # same L -> same shape bucket
+    sets = [random_flow_sets(n, 1, 5, seed=10 + i)[0] for i, n in enumerate(nets)]
+    eng = JRBAEngine(k=3, n_iters=200)
+    batched = eng.solve_many(nets, sets)
+    assert eng.stats.batched_solves == 1  # one vmapped call for all four nets
+    assert eng.stats.batched_instances == 4
+    for net, fs, got in zip(nets, sets, batched):
+        ref = JRBAEngine(k=3, n_iters=200).solve(net, fs)
+        assert got.span == pytest.approx(ref.span, rel=0.01)
+        # routes must be valid on *this* instance's topology
+        for route in got.routes:
+            for u, v in zip(route, route[1:]):
+                assert (min(u, v), max(u, v)) in net.link_index
+
+
+def test_solve_many_nets_length_mismatch_raises():
+    net = random_edge_network(10, rng=np.random.RandomState(0))
+    sets = random_flow_sets(net, 2, 4)
+    with pytest.raises(ValueError, match="nets"):
+        JRBAEngine(k=3, n_iters=50).solve_many([net], sets)
+    with pytest.raises(ValueError, match="water_filling"):
+        JRBAEngine(k=3, n_iters=50).solve_many(net, sets, water_filling=[True])
+
+
+def test_solve_many_per_instance_water_filling():
+    net = random_edge_network(12, mean_bandwidth=3.0, rng=np.random.RandomState(4))
+    sets = random_flow_sets(net, 2, 6, seed=5)
+    eng = JRBAEngine(k=3, n_iters=200)
+    plain, topped = eng.solve_many(net, [sets[0], sets[0]], water_filling=[False, True])
+    ref_plain = eng.solve(net, sets[0], water_filling=False)
+    ref_topped = eng.solve(net, sets[0], water_filling=True)
+    assert plain.span == pytest.approx(ref_plain.span, rel=0.01)
+    assert topped.span == pytest.approx(ref_topped.span, rel=0.01)
+    # water-filling only ever raises per-flow bandwidth on the same routes
+    if plain.routes == topped.routes:
+        assert np.all(topped.bandwidth >= plain.bandwidth - 1e-9)
+        assert np.sum(topped.bandwidth) >= np.sum(plain.bandwidth) - 1e-9
+
+
+def test_solve_many_batch_padding_caches_drain():
+    """A draining fleet (B = 4, then 3, then 2) must reuse the padded batch
+    shape instead of compiling one program per batch size."""
+    net = random_edge_network(10, mean_bandwidth=4.0, rng=np.random.RandomState(7))
+    eng = JRBAEngine(k=3, n_iters=60)
+    eng.solve_many(net, random_flow_sets(net, 4, 4))
+    misses = eng.stats.cache_misses
+    eng.solve_many(net, random_flow_sets(net, 3, 4, seed=1))  # pads 3 -> 4
+    eng.solve_many(net, random_flow_sets(net, 4, 4, seed=2))
+    assert eng.stats.cache_misses == misses  # no new compiled batch shapes
+    assert eng.stats.cache_hits >= 2
+    eng.solve_many(net, random_flow_sets(net, 2, 4, seed=3))  # B bucket 2: new
+    assert eng.stats.cache_misses == misses + 1
+
+
+# ---------------------------------------------------------------------------
+# The resumable stepper protocol run() and the fleet both drive
+# ---------------------------------------------------------------------------
+def test_stepper_manual_drive_matches_run():
+    net, arrivals = SCENARIOS["edge-mesh"].build(seed=3, n_jobs=4)
+    engine = JRBAEngine(k=3, n_iters=120)
+    sched = OnlineScheduler(net, "OTFA", k_paths=3, jrba_iters=120, engine=engine)
+    stepper = sched.step(arrivals)
+    requests = 0
+    try:
+        req = next(stepper)
+        while True:
+            assert isinstance(req, SolveRequest)
+            assert req.net is net and len(req.flows) > 0
+            requests += 1
+            res = engine.solve(
+                req.net, req.flows, capacity=req.capacity,
+                water_filling=req.water_filling,
+            )
+            req = stepper.send((res, 0.0))
+    except StopIteration as stop:
+        manual = stop.value
+    assert requests > 0
+    net2, arrivals2 = SCENARIOS["edge-mesh"].build(seed=3, n_jobs=4)
+    auto = OnlineScheduler(
+        net2, "OTFA", k_paths=3, jrba_iters=120, engine=engine
+    ).run(arrivals2)
+    assert [r.finish_time for r in manual.records] == [
+        r.finish_time for r in auto.records
+    ]
+    assert manual.n_events == auto.n_events
