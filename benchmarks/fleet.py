@@ -1,10 +1,11 @@
 """Fleet benchmark: scheduler throughput across the scenario suite, the
-batched-vs-sequential JRBA engine comparison, and the co-scheduled fleet
-runtime vs back-to-back simulation runs. Emits ``BENCH_fleet.json``.
+batched-vs-sequential JRBA engine comparison, the co-scheduled fleet runtime
+vs back-to-back simulation runs, and speculative intra-round OTFS batching
+vs sequential per-job solves. Emits ``BENCH_fleet.json``.
 
   PYTHONPATH=src python -m benchmarks.fleet [--smoke] [--out BENCH_fleet.json]
 
-Three sections:
+Four sections:
 
   * ``scenarios`` — for each registry scenario x policy: jobs scheduled per
     second of scheduler wall-clock, and simulator events per second (the
@@ -17,6 +18,12 @@ Three sections:
     simulations) vs the same simulations run back-to-back on a shared
     engine; records total-wall-clock speedup, mean batch occupancy, and the
     per-simulation span deviation (must stay within 1%).
+  * ``round_batch`` — OTFS with speculative intra-round batching
+    (``OnlineScheduler(speculate=True)``) vs sequential per-waiting-job
+    solves, on the MMPP burst scenarios where queues actually build up;
+    records the wall-clock speedup, the solver-dispatch collapse, the
+    speculation accept/repair split, and the record deviation (which must be
+    exactly zero — speculation must preserve sequential admissions).
 
 ``--smoke`` shrinks everything to a few events so CI can catch harness bitrot
 without measuring timings.
@@ -215,6 +222,104 @@ def bench_cosched(
     return out
 
 
+def bench_round_batch(
+    *,
+    smoke: bool,
+    scenarios: tuple[str, ...] = ("edge-mesh-burst", "edge-mesh-flash"),
+    n_jobs: int = 24,
+    n_seeds: int = 2,
+    repeats: int = 2,
+) -> list[dict]:
+    """Speculative intra-round OTFS batching vs sequential per-job solves.
+
+    Both sides share one engine per pass (warm compile caches, warm path
+    caches); the delta is purely the stepper's round batching + repair. The
+    records must match EXACTLY — speculation is only accepted when the solve
+    is bitwise the sequential one — so the deviation reported here is a
+    correctness tripwire, not a tolerance."""
+    n_iters = 60 if smoke else 250
+    k = 3
+    if smoke:
+        n_jobs, n_seeds, repeats = 6, 1, 1
+
+    rows = []
+    for scenario in scenarios:
+        def run_side(speculate: bool):
+            engine = JRBAEngine(k=k, n_iters=n_iters)
+
+            def one_pass():
+                out = []
+                for seed in range(n_seeds):
+                    net, arrivals = SCENARIOS[scenario].build(seed=seed, n_jobs=n_jobs)
+                    sched = OnlineScheduler(
+                        net,
+                        "OTFS",
+                        k_paths=k,
+                        jrba_iters=n_iters,
+                        engine=engine,
+                        speculate=speculate,
+                    )
+                    out.append(sched.run(arrivals))
+                return out
+
+            if not smoke:  # warm the compile + path caches
+                one_pass()
+            best, results = float("inf"), None
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                results = one_pass()
+                best = min(best, time.perf_counter() - t0)
+            return best, results
+
+        t_seq, seq = run_side(False)
+        t_spec, spec = run_side(True)
+
+        max_dev = 0.0
+        for a, b in zip(seq, spec):
+            assert a.n_scheduled == b.n_scheduled, "speculation changed admissions"
+            for ra, rb in zip(a.records, b.records):
+                for va, vb in ((ra.schedule_time, rb.schedule_time),
+                               (ra.finish_time, rb.finish_time)):
+                    if np.isfinite(va) and va > 0:
+                        max_dev = max(max_dev, abs(va - vb) / va)
+
+        seq_disp = sum(r.n_dispatches for r in seq)
+        spec_disp = sum(r.n_dispatches for r in spec)
+        accepted = sum(r.spec_accepted for r in spec)
+        repaired = sum(r.spec_repaired for r in spec)
+        rows.append(
+            {
+                "scenario": scenario,
+                "n_jobs": n_jobs,
+                "n_seeds": n_seeds,
+                "n_iters": n_iters,
+                "max_record_rel_dev": max_dev,
+                "seq_seconds": t_seq,
+                "spec_seconds": t_spec,
+                "speedup_wall_clock": t_seq / t_spec if t_spec else None,
+                "seq_dispatches": seq_disp,
+                "spec_dispatches": spec_disp,
+                "dispatch_collapse": seq_disp / spec_disp if spec_disp else None,
+                "seq_solves": sum(r.n_solves for r in seq),
+                "spec_solves": sum(r.n_solves for r in spec),
+                "spec_accepted": accepted,
+                "spec_repaired": repaired,
+                "spec_accept_rate": (
+                    accepted / (accepted + repaired) if accepted + repaired else None
+                ),
+            }
+        )
+        print(
+            f"round_batch[{scenario} {n_jobs}x{n_seeds} jobs] dev={max_dev:.2e} "
+            f"disp {seq_disp}->{spec_disp} "
+            f"({rows[-1]['dispatch_collapse']:.2f}x collapse) "
+            f"wall {t_seq * 1e3:.0f}ms->{t_spec * 1e3:.0f}ms "
+            f"({rows[-1]['speedup_wall_clock']:.2f}x) "
+            f"accept {accepted}/{accepted + repaired}"
+        )
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="tiny run, no timing claims")
@@ -230,6 +335,7 @@ def main() -> None:
             smoke=args.smoke, n_instances=8 if args.smoke else 32
         ),
         "cosched": bench_cosched(smoke=args.smoke, trace_path=trace_path),
+        "round_batch": bench_round_batch(smoke=args.smoke),
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
@@ -248,6 +354,22 @@ def main() -> None:
         )
         assert cos["speedup_wall_clock"] > 1.0, (
             f"co-scheduling slower than sequential ({cos['speedup_wall_clock']:.2f}x)"
+        )
+        for row in report["round_batch"]:
+            assert row["max_record_rel_dev"] == 0.0, (
+                f"speculative OTFS deviated from sequential records on "
+                f"{row['scenario']} ({row['max_record_rel_dev']:.3e})"
+            )
+            assert row["dispatch_collapse"] > 1.0, (
+                f"no dispatch collapse on {row['scenario']} "
+                f"({row['dispatch_collapse']:.2f}x)"
+            )
+        flash = next(
+            r for r in report["round_batch"] if r["scenario"] == "edge-mesh-flash"
+        )
+        assert flash["speedup_wall_clock"] >= 1.3, (
+            f"speculative round batching {flash['speedup_wall_clock']:.2f}x < 1.3x "
+            "over sequential OTFS on the MMPP flash-crowd scenario"
         )
 
 

@@ -47,7 +47,12 @@ def fig2_motivating(quick: bool = False) -> dict:
     r = jrba(net, fl, k=4)
     rows["f_jrba"] = throughput(net, a, r.flows, r.bandwidth)
     us = (time.perf_counter() - t0) / 4 * 1e6
-    expect = {"c_no_partition": 2.0, "d_equal_share": 2.5, "e_proportional_bw": 10 / 3, "f_jrba": 4.0}
+    expect = {
+        "c_no_partition": 2.0,
+        "d_equal_share": 2.5,
+        "e_proportional_bw": 10 / 3,
+        "f_jrba": 4.0,
+    }
     for k, v in rows.items():
         ok = "ok" if abs(v - expect[k]) < 1e-3 else f"EXPECTED {expect[k]:.3f}"
         print(csv_line(f"fig2/{k}", us, f"throughput={v:.4f} ({ok})"))

@@ -1,0 +1,150 @@
+"""Benchmark-regression gate: compare a fresh ``BENCH_fleet.json`` against
+the committed baseline and fail on regression, so BENCH numbers stop being
+write-only artifacts.
+
+  python scripts/check_bench.py FRESH BASELINE [--threshold 0.2]
+
+Two kinds of checks:
+
+  * **Correctness caps** (always, including ``--smoke`` reports): the batch
+    and cosched span deviations stay within 1%, and the round_batch record
+    deviation stays exactly zero — speculative OTFS must reproduce
+    sequential admissions bit-for-bit at any scale.
+  * **Regression ratios** (only when BOTH reports are non-smoke, since smoke
+    timings are meaningless): every tracked machine-relative metric —
+    batch/cosched/round_batch speedups, batch occupancy, dispatch collapse,
+    speculation accept rate; all of them same-machine before/after ratios —
+    must stay within ``threshold`` (default 20%) of the baseline. A metric
+    present in the baseline but missing from the fresh report fails (a
+    section can't silently vanish). ``--absolute`` additionally compares the
+    raw per-scenario throughputs (jobs/s, events/s); those are
+    machine-dependent, so only use it when both reports were generated on
+    comparable hardware (NOT when comparing a CI runner against a committed
+    developer-machine baseline).
+
+Exit status 0 = gate passed, 1 = regression or violated cap.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _ratio_metrics(report: dict, *, absolute: bool = False) -> dict[str, float]:
+    """Flatten the tracked higher-is-better metrics into ``name -> value``."""
+    out: dict[str, float] = {}
+    if absolute:
+        for row in report.get("scenarios", []):
+            key = f"scenarios[{row['scenario']}/{row['policy']}]"
+            for metric in ("sched_jobs_per_s", "events_per_s"):
+                if row.get(metric) is not None:
+                    out[f"{key}.{metric}"] = row[metric]
+        if report.get("cosched", {}).get("events_per_s") is not None:
+            out["cosched.events_per_s"] = report["cosched"]["events_per_s"]
+    batch = report.get("batch", {})
+    for metric in ("speedup_solve_stage", "speedup_end_to_end"):
+        if batch.get(metric) is not None:
+            out[f"batch.{metric}"] = batch[metric]
+    cosched = report.get("cosched", {})
+    for metric in ("speedup_wall_clock", "mean_batch_occupancy"):
+        if cosched.get(metric) is not None:
+            out[f"cosched.{metric}"] = cosched[metric]
+    for row in report.get("round_batch", []):
+        key = f"round_batch[{row['scenario']}]"
+        for metric in ("speedup_wall_clock", "dispatch_collapse", "spec_accept_rate"):
+            if row.get(metric) is not None:
+                out[f"{key}.{metric}"] = row[metric]
+    return out
+
+
+def _check_caps(report: dict, label: str) -> list[str]:
+    """Deviation caps that hold at every scale (smoke included)."""
+    failures = []
+    batch_dev = report.get("batch", {}).get("max_span_rel_dev")
+    if batch_dev is not None and batch_dev > 0.01:
+        failures.append(f"{label}: batch.max_span_rel_dev {batch_dev:.3e} > 1%")
+    cos_dev = report.get("cosched", {}).get("max_span_rel_dev")
+    if cos_dev is not None and cos_dev > 0.01:
+        failures.append(f"{label}: cosched.max_span_rel_dev {cos_dev:.3e} > 1%")
+    for row in report.get("round_batch", []):
+        dev = row.get("max_record_rel_dev")
+        if dev is not None and dev != 0.0:
+            failures.append(
+                f"{label}: round_batch[{row['scenario']}].max_record_rel_dev "
+                f"{dev:.3e} != 0 (speculation broke sequential semantics)"
+            )
+    return failures
+
+
+REQUIRED_SECTIONS = ("scenarios", "batch", "cosched", "round_batch")
+
+
+def compare(
+    fresh: dict, baseline: dict, threshold: float, *, absolute: bool = False
+) -> list[str]:
+    failures = []
+    for section in REQUIRED_SECTIONS:
+        if section in baseline and section not in fresh:
+            failures.append(f"section {section!r} missing from fresh report")
+    failures += _check_caps(fresh, "fresh")
+
+    if fresh.get("smoke") or baseline.get("smoke"):
+        print(
+            "note: smoke report involved — timing regressions not compared, "
+            "only structure and correctness caps"
+        )
+        return failures
+
+    base_metrics = _ratio_metrics(baseline, absolute=absolute)
+    fresh_metrics = _ratio_metrics(fresh, absolute=absolute)
+    for name, base_value in sorted(base_metrics.items()):
+        got = fresh_metrics.get(name)
+        if got is None:
+            failures.append(f"metric {name} missing from fresh report")
+            continue
+        floor = base_value * (1.0 - threshold)
+        status = "OK" if got >= floor else "REGRESSED"
+        print(f"{status:9s} {name}: {got:.3f} vs baseline {base_value:.3f}")
+        if got < floor:
+            failures.append(
+                f"{name} regressed >{threshold:.0%}: {got:.3f} < "
+                f"{floor:.3f} (baseline {base_value:.3f})"
+            )
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", help="freshly generated BENCH_fleet.json")
+    ap.add_argument("baseline", help="committed baseline BENCH_fleet.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.2,
+        help="maximum tolerated fractional regression (default 0.2 = 20%%)",
+    )
+    ap.add_argument(
+        "--absolute",
+        action="store_true",
+        help="also compare machine-dependent absolute throughputs (jobs/s, "
+        "events/s); only meaningful when both reports come from comparable "
+        "hardware",
+    )
+    args = ap.parse_args()
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = compare(fresh, baseline, args.threshold, absolute=args.absolute)
+    if failures:
+        print("\nbench-regression gate FAILED:")
+        for failure in failures:
+            print(f"  - {failure}")
+        return 1
+    print("\nbench-regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

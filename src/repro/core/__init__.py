@@ -25,11 +25,19 @@ from .jrba import (
     build_program,
     jrba,
     jrba_batch,
+    link_load_fits,
     solve_relaxation,
     solve_relaxation_batch,
     water_fill,
 )
-from .online import POLICIES, JobRecord, OnlineScheduler, SimResult, SolveRequest
+from .online import (
+    POLICIES,
+    JobRecord,
+    OnlineScheduler,
+    RoundRequest,
+    SimResult,
+    SolveRequest,
+)
 from .paths import avg_path_bandwidth, dijkstra, k_shortest_paths, path_links
 from .profiler import TPU_V5E, JobProfile, NodeClass, profile_job, profile_on_network
 from .scenarios import (
@@ -68,6 +76,7 @@ __all__ = [
     "SCENARIOS",
     "Scenario",
     "SimResult",
+    "RoundRequest",
     "SolveRequest",
     "Task",
     "TPU_V5E",
@@ -90,6 +99,7 @@ __all__ = [
     "job_span",
     "jrba",
     "jrba_batch",
+    "link_load_fits",
     "k_shortest_paths",
     "path_links",
     "poisson_arrivals",

@@ -42,6 +42,7 @@ __all__ = [
     "solve_relaxation_batch",
     "jrba",
     "jrba_batch",
+    "link_load_fits",
     "water_fill",
     "brute_force_span",
 ]
@@ -277,10 +278,27 @@ class JRBAResult:
     relaxed_span: float  # LP lower-bound certificate (TH of the relaxation)
     flows: list[Flow]
     link_load: np.ndarray  # consumed bandwidth per link
+    # links on ANY candidate path of ANY real flow — the solver's output is a
+    # function of capacity on exactly these links (zero-usage links contribute
+    # exact zeros to the congestion vector), so speculative intra-round
+    # batching can accept a stale solve whenever the residual is unchanged on
+    # this mask (see OnlineScheduler's repair pass)
+    candidate_links: np.ndarray | None = None
 
     @property
     def throughput_bound(self) -> float:
         return 1.0 / self.span if self.span > 0 else float("inf")
+
+
+def link_load_fits(
+    link_load: np.ndarray, residual: np.ndarray, *, rel_eps: float = 1e-9
+) -> bool:
+    """Overcommit detector: does ``link_load`` fit within ``residual`` on every
+    link? The speculative OTFS repair pass runs this before committing an
+    accepted solve, so a bad speculation can never oversubscribe a link; tests
+    craft deliberate two-job conflicts against it."""
+    slack = rel_eps * np.maximum(np.abs(residual), 1.0)
+    return bool(np.all(link_load <= residual + slack))
 
 
 def _best_response_sweeps(
@@ -346,6 +364,7 @@ def _finalize(
         relaxed_span=relaxed,
         flows=prog.flows,
         link_load=link_load,
+        candidate_links=(prog.usage > 0).any(axis=(0, 1)),
     )
 
 
@@ -455,6 +474,28 @@ class JRBAEngine:
             pad_to=self.bucket(n_real),
             path_cache=cache,
         )
+
+    def candidate_links(self, net: NetworkGraph, flows: list[Flow]) -> np.ndarray:
+        """Bool mask over links of every candidate path of ``flows`` — the
+        footprint a JRBA solve of them could touch (and the only capacity
+        entries its output depends on). Served from the per-net path cache, so
+        after warm-up this is a cheap host-side lookup; the speculative OTFS
+        repair pass uses it to decide which queued speculations an admission
+        can invalidate."""
+        cache = self._paths.get(net)
+        if cache is None:
+            cache = self._paths.setdefault(net, {})
+        mask = np.zeros(len(net.links), dtype=bool)
+        for f in flows:
+            if f.src == f.dst or f.volume <= 0:
+                continue
+            key = (f.src, f.dst, self.k)
+            ps = cache.get(key)
+            if ps is None:
+                ps = cache[key] = k_shortest_paths(net, f.src, f.dst, self.k)
+            for path in ps:
+                mask[path_links(net, path)] = True
+        return mask
 
     def solve(
         self,

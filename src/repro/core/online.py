@@ -36,10 +36,17 @@ from .allocation import (
     job_span,
 )
 from .graph import Flow, JobGraph, NetworkGraph
-from .jrba import JRBAEngine, JRBAResult
+from .jrba import JRBAEngine, JRBAResult, link_load_fits
 from .paths import path_links
 
-__all__ = ["JobRecord", "SimResult", "SolveRequest", "OnlineScheduler", "POLICIES"]
+__all__ = [
+    "JobRecord",
+    "RoundRequest",
+    "SimResult",
+    "SolveRequest",
+    "OnlineScheduler",
+    "POLICIES",
+]
 
 POLICIES = ("LR", "BR", "TP", "OTFS", "OTFA", "OTFS+WF", "OTFA+WF")
 
@@ -83,6 +90,20 @@ class SimResult:
     sched_overhead: float  # total wall-clock spent inside scheduling calls
     unfinished: int
     n_events: int = 0  # simulator events processed (arrivals + completions)
+    # stepper-protocol traffic: a dispatch is one RoundRequest yielded to the
+    # driver; a solve is one JRBA program inside it. Sequential OTFS has
+    # n_dispatches == n_solves; speculative intra-round batching collapses
+    # many solves into few dispatches (the per-event latency lever).
+    n_dispatches: int = 0
+    n_solves: int = 0
+    spec_rounds: int = 0  # scheduling rounds where speculation was consulted
+    spec_accepted: int = 0  # speculative solutions reused verbatim
+    spec_repaired: int = 0  # speculative solutions discarded and re-solved
+
+    @property
+    def spec_accept_rate(self) -> float:
+        tried = self.spec_accepted + self.spec_repaired
+        return self.spec_accepted / tried if tried else 0.0
 
     @property
     def n_scheduled(self) -> int:
@@ -111,17 +132,7 @@ class SimResult:
 
 @dataclasses.dataclass
 class SolveRequest:
-    """A pending JRBA solve surfaced by :meth:`OnlineScheduler.step`.
-
-    The stepper suspends wherever the event loop needs a JRBA solution and
-    yields one of these; the driver answers via ``gen.send((result, seconds))``
-    where ``result`` is a :class:`JRBAResult` (``None`` for empty programs)
-    and ``seconds`` is the solver wall-clock to attribute to this
-    simulation's ``sched_overhead``. :meth:`OnlineScheduler.run` answers each
-    request inline through the scheduler's own engine;
-    ``repro.fleet.FleetRuntime`` instead collects one request per live
-    simulation and answers them all through a single batched
-    :meth:`JRBAEngine.solve_many` call."""
+    """One JRBA program the simulation needs solved."""
 
     net: NetworkGraph
     flows: list[Flow]
@@ -129,7 +140,54 @@ class SolveRequest:
     water_filling: bool = False
 
 
-SolveReply = tuple[JRBAResult | None, float]  # (solution, solver wall-clock)
+@dataclasses.dataclass
+class RoundRequest:
+    """The pending solves of one suspension point of
+    :meth:`OnlineScheduler.step`.
+
+    The stepper suspends wherever the event loop needs JRBA solutions and
+    yields one of these; the driver answers via
+    ``gen.send((results, seconds))`` where ``results`` aligns with ``solves``
+    (``None`` entries for empty programs) and ``seconds`` is the solver
+    wall-clock to attribute to this simulation's ``sched_overhead``.
+
+    Most suspension points carry a single solve (an OTFA refresh, a
+    sequential-OTFS admission, a repair re-solve); a speculative OTFS round
+    carries one solve per waiting job, all against the same residual
+    snapshot. :meth:`OnlineScheduler.run` answers requests inline through the
+    scheduler's own engine (``solve`` for singletons, ``solve_many``
+    otherwise); ``repro.fleet.FleetRuntime`` instead flattens every live
+    simulation's round into a single batched :meth:`JRBAEngine.solve_many`
+    call."""
+
+    solves: list[SolveRequest]
+
+
+RoundReply = tuple[list[JRBAResult | None], float]  # (solutions, wall-clock)
+
+
+@dataclasses.dataclass
+class _Speculation:
+    """Per-job artifact of a speculative OTFS round, consumed by the repair
+    pass: the allocation (with its memory effect, so repair can replay it
+    without re-running Algorithm 1) and the solution obtained against the
+    round-start residual snapshot."""
+
+    alloc: Allocation
+    flows: list[Flow]
+    mem_before: np.ndarray  # net.mem_avail when this job's allocation ran
+    mem_after: np.ndarray  # net.mem_avail after it (== before if infeasible)
+    result: JRBAResult | None = None
+    capacity0: np.ndarray | None = None  # residual snapshot it solved against
+
+
+def _same_flows(a: list[Flow], b: list[Flow]) -> bool:
+    """Value equality on the fields that shape a JRBA program (job_id is
+    constant within one job's candidates)."""
+    return len(a) == len(b) and all(
+        (fa.src, fa.dst, fa.volume, fa.edge) == (fb.src, fb.dst, fb.volume, fb.edge)
+        for fa, fb in zip(a, b)
+    )
 
 
 class OnlineScheduler:
@@ -146,6 +204,7 @@ class OnlineScheduler:
         jrba_iters: int = 300,
         max_acceptable_span: float = 1e4,
         engine: JRBAEngine | None = None,
+        speculate: bool = True,
     ) -> None:
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
@@ -154,6 +213,11 @@ class OnlineScheduler:
         self.base = policy.split("+")[0]
         self.max_acceptable_span = max_acceptable_span
         self.water_fill = policy.endswith("+WF")
+        # OTFS only: solve all waiting jobs of a round in one batched call
+        # against the round-start residual, then repair conflicts per job.
+        # Admission outcomes are exactly the sequential ones (see
+        # schedule_round); False forces one solve per waiting job.
+        self.speculate = speculate
         # shared engines keep compiled shape buckets + path caches warm across
         # schedulers (a fleet of simulations pays compile cost once); a passed
         # engine is authoritative, so k_paths/jrba_iters re-derive from it
@@ -178,20 +242,33 @@ class OnlineScheduler:
         max_time: float = 1e6,
     ) -> SimResult:
         """Drive :meth:`step` to completion, answering every
-        :class:`SolveRequest` inline through the scheduler's own engine —
-        byte-for-byte the pre-stepper behaviour (same solves, same order)."""
+        :class:`RoundRequest` inline through the scheduler's own engine.
+        Singleton rounds go through the scalar ``solve`` path — byte-for-byte
+        the pre-stepper behaviour — while speculative multi-solve rounds go
+        through one ``solve_many`` dispatch (the intra-round batching win)."""
         stepper = self.step(arrivals, max_time=max_time)
         try:
             req = next(stepper)
             while True:
                 t0 = time.perf_counter()
-                res = self.engine.solve(
-                    req.net,
-                    req.flows,
-                    capacity=req.capacity,
-                    water_filling=req.water_filling,
-                )
-                req = stepper.send((res, time.perf_counter() - t0))
+                if len(req.solves) == 1:
+                    s = req.solves[0]
+                    results = [
+                        self.engine.solve(
+                            s.net,
+                            s.flows,
+                            capacity=s.capacity,
+                            water_filling=s.water_filling,
+                        )
+                    ]
+                else:
+                    results = self.engine.solve_many(
+                        [s.net for s in req.solves],
+                        [s.flows for s in req.solves],
+                        capacities=[s.capacity for s in req.solves],
+                        water_filling=[s.water_filling for s in req.solves],
+                    )
+                req = stepper.send((results, time.perf_counter() - t0))
         except StopIteration as stop:
             return stop.value
 
@@ -200,14 +277,14 @@ class OnlineScheduler:
         arrivals: list[tuple[float, JobGraph, float]],  # (time, job, total_units)
         *,
         max_time: float = 1e6,
-    ) -> Generator[SolveRequest, SolveReply, SimResult]:
+    ) -> Generator[RoundRequest, RoundReply, SimResult]:
         """Resumable event loop: a generator that yields a
-        :class:`SolveRequest` at every point the simulation needs a JRBA
-        solution and expects ``(JRBAResult | None, solve_seconds)`` back via
-        ``send``. Returns the :class:`SimResult` as the generator's value
-        (``StopIteration.value``). This is the unit the fleet runtime
-        co-schedules: N steppers advanced in lockstep batch their solves
-        through one compiled call."""
+        :class:`RoundRequest` at every point the simulation needs JRBA
+        solutions and expects ``(list[JRBAResult | None], solve_seconds)``
+        back via ``send``. Returns the :class:`SimResult` as the generator's
+        value (``StopIteration.value``). This is the unit the fleet runtime
+        co-schedules: N steppers advanced in lockstep flatten their rounds'
+        solves through one compiled call."""
         net = self.net
         net.reset_residual()
         records = [
@@ -222,6 +299,19 @@ class OnlineScheduler:
             heapq.heappush(events, (r.submit_time, seq, "arrive", r.job_id))
             seq += 1
         sched_overhead = 0.0
+        n_dispatches = n_solves = 0
+        spec_rounds = spec_accepted = spec_repaired = 0
+
+        def solve_round(reqs: list[SolveRequest]):
+            """Sub-generator wrapping every driver suspension: yields one
+            :class:`RoundRequest`, books the protocol counters and the solver
+            wall-clock, and returns the aligned result list."""
+            nonlocal sched_overhead, n_dispatches, n_solves
+            results, dt = yield RoundRequest(reqs)
+            sched_overhead += dt
+            n_dispatches += 1
+            n_solves += len(reqs)
+            return results
 
         def advance_running(now: float) -> None:
             for r in q_run:
@@ -265,7 +355,6 @@ class OnlineScheduler:
         def refresh_otfa(now: float):
             """OTFA (Algo 4 lines 13-15): JRBA over all flows, full capacity.
             A sub-generator: the solve itself is yielded to the driver."""
-            nonlocal sched_overhead
             all_flows = [f for r in q_run for f in r.flows]
             if not all_flows:
                 for r in q_run:
@@ -273,9 +362,13 @@ class OnlineScheduler:
                         r.span = job_span(net, r.alloc, r.flows, np.zeros(0))
                         set_finish_event(r, now)
                 return
-            res, dt = yield SolveRequest(net, all_flows, net.capacity, self.water_fill)
-            sched_overhead += dt
-            lookup = {id(f): (b, route) for f, b, route in zip(res.flows, res.bandwidth, res.routes)}
+            (res,) = yield from solve_round(
+                [SolveRequest(net, all_flows, net.capacity, self.water_fill)]
+            )
+            lookup = {
+                id(f): (b, route)
+                for f, b, route in zip(res.flows, res.bandwidth, res.routes)
+            }
             for r in q_run:
                 r.bandwidths = np.array([lookup[id(f)][0] for f in r.flows])
                 r.routes = [lookup[id(f)][1] for f in r.flows]
@@ -283,23 +376,181 @@ class OnlineScheduler:
                 set_finish_event(r, now)
             net.residual = np.maximum(net.capacity - res.link_load, 0.0)
 
-        def schedule_round(now: float):
-            """Sub-generator: OTFS solves (one per waiting job — each consumes
-            residual capacity, so they stay sequential within a round) and the
-            OTFA refresh are yielded to the driver."""
-            nonlocal sched_overhead
-            q_wait.sort(key=lambda r: -(now - r.submit_time))  # Algo 3/4 line 9
-            newly: list[JobRecord] = []
-            for r in list(q_wait):
-                mem_snapshot = net.mem_avail.copy()
-                t0 = time.perf_counter()
+        spec_memo: dict[int, _Speculation] = {}  # job_id -> live speculation
+
+        def speculate_round(pending: list[JobRecord]):
+            """Speculative half of intra-round batching: make sure every
+            waiting job has a live speculation — an Algorithm-1 allocation
+            (with its memory effect recorded, so the repair pass can replay it
+            without re-running the allocator) plus a JRBA solution against the
+            round-start residual snapshot — solving all MISSING or STALE
+            programs in one batched dispatch. Speculations persist across
+            scheduling rounds: a queued job re-solves only when the residual
+            moved on its candidate footprint or the memory state shifted under
+            its allocation, so a deep waiting queue stops costing one solve
+            per job per round. The repair pass in :func:`schedule_round`
+            re-validates every speculation at use time, in priority order.
+
+            Each job allocates against the ROUND-START memory: in the
+            queue-building regime speculation targets, earlier queued jobs are
+            mostly span-rejected (their memory is restored), so the sequential
+            memory state at each job IS mem0 — assuming earlier admissions
+            instead would cascade allocation divergence down the whole round
+            after the first rejection."""
+            nonlocal sched_overhead, spec_rounds
+            spec_rounds += 1
+            mem0 = net.mem_avail.copy()
+            cap0 = net.residual.copy()
+            fresh: list[_Speculation] = []
+            t0 = time.perf_counter()
+            for r in pending:
+                old = spec_memo.get(r.job_id)
+                if (
+                    old is not None
+                    and np.array_equal(mem0, old.mem_before)
+                    and (not old.alloc.feasible or spec_exact(old))
+                ):
+                    continue  # carried over from an earlier round, still exact
+                net.mem_avail = mem0.copy()
                 alloc, flows = self._allocate(r.job, r.job_id)
-                sched_overhead += time.perf_counter() - t0
+                sp = _Speculation(alloc, flows, mem0, net.mem_avail.copy())
+                spec_memo[r.job_id] = sp
+                if not sp.alloc.feasible:
+                    continue
+                if (
+                    old is not None
+                    and old.alloc.feasible
+                    and _same_flows(flows, old.flows)
+                    and spec_exact(old)
+                ):
+                    # the memory state moved but the re-allocation landed on
+                    # the same flows and the old solve's footprint is still
+                    # clean: the old solution remains bitwise exact
+                    sp.result, sp.capacity0 = old.result, old.capacity0
+                    continue
+                fresh.append(sp)
+            sched_overhead += time.perf_counter() - t0
+            net.mem_avail = mem0
+            if fresh:
+                results = yield from solve_round(
+                    [SolveRequest(net, sp.flows, cap0, self.water_fill) for sp in fresh]
+                )
+                for sp, res in zip(fresh, results):
+                    sp.result, sp.capacity0 = res, cap0
+
+        def spec_exact(sp: _Speculation) -> bool:
+            """Accept check of the repair pass: is the speculative solution
+            exactly what a fresh solve on the CURRENT residual would return?
+            The solver's output depends on capacity only over the program's
+            candidate links (zero-usage links contribute exact zeros to the
+            congestion vector), so a residual unchanged on that footprint
+            makes the stale program equivalent to the fresh one. The
+            ``link_load_fits`` guard is redundant under that check but keeps
+            a bad speculation from ever overcommitting a link.
+
+            Caveat: "equivalent program" guarantees identical results through
+            the SAME solver entry point; accepted speculations may come from
+            the vmapped batch path while a speculate=False run uses the
+            scalar path. The two agree whenever argmax rounding (after the
+            best-response sweeps) lands on the same vertex — which holds on
+            scheduler workloads and is asserted by the round_batch benchmark
+            on pinned seeds — but a degenerate near-tie could in principle
+            round differently between the two compiled paths."""
+            if sp.result is None:
+                return True  # empty program: consumed nothing, can't go stale
+            mask = sp.result.candidate_links
+            # compare the CLAMPED values: build_program feeds the solver
+            # np.maximum(capacity, 1e-9), so two residuals that clamp equal
+            # produce bit-identical program tensors
+            if not np.array_equal(
+                np.maximum(net.residual[mask], 1e-9),
+                np.maximum(sp.capacity0[mask], 1e-9),
+            ):
+                return False
+            return link_load_fits(sp.result.link_load, net.residual)
+
+        def schedule_round(now: float):
+            """Sub-generator: job admissions and the OTFA refresh, yielded to
+            the driver. OTFS admissions consume residual capacity, so the
+            paper runs one JRBA per waiting job sequentially; with
+            ``speculate`` the round instead solves every waiting job against
+            the same residual snapshot in one batched dispatch, then repairs
+            in Algo-3 priority order — a job whose footprint the earlier
+            admissions never touched keeps its speculative solution (bitwise
+            the sequential outcome), anything else is re-solved exactly."""
+            nonlocal sched_overhead, spec_accepted, spec_repaired
+            q_wait.sort(key=lambda r: -(now - r.submit_time))  # Algo 3/4 line 9
+            pending = list(q_wait)
+            if self.speculate and self.base == "OTFS" and pending:
+                yield from speculate_round(pending)
+            newly: list[JobRecord] = []
+            for i, r in enumerate(pending):
+                mem_snapshot = net.mem_avail.copy()
+                sp = spec_memo.get(r.job_id)
+                if sp is not None and np.array_equal(net.mem_avail, sp.mem_before):
+                    # memory state matches the speculative pass; Algorithm 1
+                    # is deterministic in it, so replay the recorded result
+                    alloc, flows = sp.alloc, sp.flows
+                    net.mem_avail = sp.mem_after.copy()
+                    flows_ok = True
+                else:
+                    t0 = time.perf_counter()
+                    alloc, flows = self._allocate(r.job, r.job_id)
+                    sched_overhead += time.perf_counter() - t0
+                    flows_ok = sp is not None and _same_flows(flows, sp.flows)
                 if not alloc.feasible:
                     continue
                 if self.base == "OTFS":
-                    res, dt = yield SolveRequest(net, flows, net.residual, self.water_fill)
-                    sched_overhead += dt
+                    if sp is not None and flows_ok and spec_exact(sp):
+                        res = sp.result
+                        spec_accepted += 1
+                    else:
+                        # conflict (or no speculation): the exact re-solve for
+                        # THIS job rides one dispatch with a re-speculation of
+                        # stale queued jobs against the fresh residual, so one
+                        # conflict doesn't degrade the round to sequential.
+                        # Still-clean speculations keep their results, and
+                        # stale ones overlapping THIS job's candidate
+                        # footprint are left alone — if this job is admitted
+                        # its load would invalidate them right back, so
+                        # pre-solving them is wasted compute either way.
+                        capR = net.residual.copy()
+                        rest: list[_Speculation] = []
+                        if spec_memo:
+                            trigger = self.engine.candidate_links(net, flows)
+                            rest = [
+                                sr
+                                for rr in pending[i + 1 :]
+                                if (sr := spec_memo.get(rr.job_id)) is not None
+                                and sr.alloc.feasible
+                                and not spec_exact(sr)
+                                and sr.result is not None
+                                and not np.any(sr.result.candidate_links & trigger)
+                            ]
+                        results = yield from solve_round(
+                            [SolveRequest(net, flows, capR, self.water_fill)]
+                            + [
+                                SolveRequest(net, sr.flows, capR, self.water_fill)
+                                for sr in rest
+                            ]
+                        )
+                        res = results[0]
+                        for sr, rr_res in zip(rest, results[1:]):
+                            sr.result, sr.capacity0 = rr_res, capR
+                        if sp is not None and sp.alloc.feasible:
+                            spec_repaired += 1
+                        if self.speculate:
+                            # memoize the fresh exact solve: if the span check
+                            # below rejects this job, the next round can carry
+                            # it over instead of re-solving from scratch
+                            spec_memo[r.job_id] = _Speculation(
+                                alloc,
+                                flows,
+                                mem_snapshot,
+                                net.mem_avail.copy(),
+                                res,
+                                capR,
+                            )
                     bandwidths = np.zeros(0) if res is None else res.bandwidth
                     span = job_span(net, alloc, flows, bandwidths)
                     if not np.isfinite(span) or span > self.max_acceptable_span:
@@ -316,6 +567,7 @@ class OnlineScheduler:
                 r.schedule_time = now
                 r.last_update = now
                 q_wait.remove(r)
+                spec_memo.pop(r.job_id, None)
                 newly.append(r)
                 q_run.append(r)
                 if self.base == "OTFS":
@@ -363,4 +615,14 @@ class OnlineScheduler:
                 q_wait.append(r)
             yield from schedule_round(now)
         unfinished = sum(1 for r in records if not r.done)
-        return SimResult(records, sched_overhead, unfinished, n_events)
+        return SimResult(
+            records,
+            sched_overhead,
+            unfinished,
+            n_events,
+            n_dispatches=n_dispatches,
+            n_solves=n_solves,
+            spec_rounds=spec_rounds,
+            spec_accepted=spec_accepted,
+            spec_repaired=spec_repaired,
+        )

@@ -109,11 +109,25 @@ def path_links(net: NetworkGraph, path: list[int]) -> list[int]:
 def avg_path_bandwidth(net: NetworkGraph, src: int, dst: int) -> float:
     """Average bandwidth along the shortest path (Algo 1, line 7 note: 'we set
     the bandwidth between two edge nodes as the average bandwidth of all
-    routing links'). Infinite for colocated endpoints."""
+    routing links'). Infinite for colocated endpoints.
+
+    Memoized per network: the value depends only on static topology and
+    bandwidth (never on residual capacity or free memory), and Algorithm 1
+    queries it for every candidate node of every task — uncached it is the
+    online scheduler's hottest host-side path."""
     if src == dst:
         return float("inf")
+    cache = getattr(net, "_avg_bw_cache", None)
+    if cache is None:
+        cache = net._avg_bw_cache = {}
+    hit = cache.get((src, dst))
+    if hit is not None:
+        return hit
     path = dijkstra(net, src, dst)
     if path is None:
-        return 0.0
-    bws = [net.capacity[l] for l in path_links(net, path)]
-    return float(sum(bws) / len(bws))
+        bw = 0.0
+    else:
+        bws = [net.capacity[l] for l in path_links(net, path)]
+        bw = float(sum(bws) / len(bws))
+    cache[(src, dst)] = bw
+    return bw

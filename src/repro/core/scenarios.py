@@ -256,6 +256,14 @@ SCENARIOS: dict[str, Scenario] = {
             _bursty(),
         ),
         Scenario(
+            "edge-mesh-flash",
+            "paper mesh under a sustained MMPP flash crowd: arrivals outpace "
+            "completions, so scheduling rounds see deep waiting queues (the "
+            "intra-round speculative-batching regime)",
+            lambda rng: random_edge_network(14, mean_bandwidth=1.0, rng=rng),
+            _bursty(lam_burst=6.0),
+        ),
+        Scenario(
             "edge-cloud",
             "three-tier edge/aggregation/cloud hierarchy",
             lambda rng: hierarchical_edge_cloud(12, 3, 1, rng=rng),

@@ -8,9 +8,10 @@ dwarfs its FLOPs, so the vmapped batch solver sits idle exactly where fleet
 traffic needs it. The runtime exploits that the simulations are *mutually
 independent* (each owns its topology and arrival trace): it drives every
 simulation's resumable stepper (:meth:`OnlineScheduler.step`) to its next
-pending :class:`~repro.core.SolveRequest`, stacks all pending requests
-through the extended :meth:`JRBAEngine.solve_many` (which batches across
-networks by shape bucket), and resumes each simulation with its own result.
+pending :class:`~repro.core.RoundRequest` (one or more solves — speculative
+OTFS rounds carry one per waiting job), flattens all pending solves through
+the extended :meth:`JRBAEngine.solve_many` (which batches across networks by
+shape bucket), and resumes each simulation with its own slice of results.
 Simulated clocks advance independently — lockstep is over *solve rounds*,
 not simulated time, which is sound precisely because no state is shared.
 
@@ -26,7 +27,7 @@ from typing import Generator
 
 from ..core.graph import JobGraph
 from ..core.jrba import JRBAEngine
-from ..core.online import OnlineScheduler, SimResult, SolveRequest
+from ..core.online import OnlineScheduler, RoundRequest, SimResult
 from ..core.scenarios import SCENARIOS
 from .telemetry import FleetTelemetry, RoundRecord
 
@@ -89,8 +90,8 @@ class _Lane:
     """Runtime state of one simulation stepper."""
 
     sim: FleetSim
-    gen: Generator[SolveRequest, tuple, SimResult]
-    pending: SolveRequest | None = None
+    gen: Generator[RoundRequest, tuple, SimResult]
+    pending: RoundRequest | None = None
     result: SimResult | None = None
 
 
@@ -115,11 +116,12 @@ class FleetResult:
 class FleetRuntime:
     """Lockstep multi-simulation driver over one shared :class:`JRBAEngine`.
 
-    Every round: collect one pending solve per live simulation, dispatch them
-    all through ``solve_many`` (same-shape instances share a compiled vmapped
-    call; solver wall-clock is amortized evenly across the round's requests
-    for per-sim ``sched_overhead`` accounting), resume each stepper with its
-    result, and record telemetry. Simulations drop out as they finish; the
+    Every round: collect each live simulation's pending round (one or more
+    solves — speculative OTFS rounds batch all their waiting jobs), flatten
+    them all through ``solve_many`` (same-shape instances share a compiled
+    vmapped call; solver wall-clock is amortized per solve for per-sim
+    ``sched_overhead`` accounting), resume each stepper with its slice of
+    results, and record telemetry. Simulations drop out as they finish; the
     engine's batch-dimension padding keeps the draining fleet on O(log N)
     compiled batch shapes.
     """
@@ -156,7 +158,10 @@ class FleetRuntime:
             live = [ln for ln in lanes if ln.result is None]
             if not live:
                 break
-            reqs = [ln.pending for ln in live]
+            # a lane's round may carry several solves (speculative OTFS
+            # batches all waiting jobs); flatten every live lane's round into
+            # one engine call and split the aligned results back per lane
+            solves = [s for ln in live for s in ln.pending.solves]
             stats = engine.stats
             calls0, inst0, solve0 = (
                 stats.batched_solves,
@@ -165,21 +170,25 @@ class FleetRuntime:
             )
             t0 = time.perf_counter()
             outs = engine.solve_many(
-                [r.net for r in reqs],
-                [r.flows for r in reqs],
-                capacities=[r.capacity for r in reqs],
-                water_filling=[r.water_filling for r in reqs],
+                [s.net for s in solves],
+                [s.flows for s in solves],
+                capacities=[s.capacity for s in solves],
+                water_filling=[s.water_filling for s in solves],
             )
             dispatch_seconds = time.perf_counter() - t0
-            per_req = dispatch_seconds / len(reqs)
-            for lane, res in zip(live, outs):
-                self._advance(lane, (res, per_req))
+            per_solve = dispatch_seconds / len(solves) if solves else 0.0
+            off = 0
+            for lane in live:
+                n = len(lane.pending.solves)
+                self._advance(lane, (outs[off : off + n], per_solve * n))
+                off += n
             batch_calls = stats.batched_solves - calls0
             telemetry.record_round(
                 RoundRecord(
                     round=round_idx,
                     n_live=len(live),
-                    n_requests=len(reqs),
+                    n_requests=len(live),
+                    n_solves=len(solves),
                     batch_calls=batch_calls,
                     batch_occupancy=(
                         (stats.batched_instances - inst0) / batch_calls

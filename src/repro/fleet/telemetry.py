@@ -27,7 +27,11 @@ class RoundRecord:
 
     round: int
     n_live: int  # simulations still running when the round started
-    n_requests: int  # SolveRequests collected (== n_live by construction)
+    n_requests: int  # RoundRequests collected (== n_live by construction)
+    # individual JRBA programs flattened out of the collected rounds; above
+    # n_requests means speculative intra-round batching contributed extra
+    # same-round solves to the shared dispatch
+    n_solves: int
     batch_calls: int  # compiled batch dispatches this round (shape groups)
     # batched instances per compiled call — >1 means real batching. Can be
     # less than n_requests / batch_calls: empty-program requests (idle lanes
@@ -69,10 +73,13 @@ class FleetTelemetry:
         by_name: dict[str, list] = {}
         for name, res in zip(names, results):
             by_name.setdefault(name or "sim", []).append(res)
+        spec_accepted = sum(r.spec_accepted for r in results)
+        spec_repaired = sum(r.spec_repaired for r in results)
         self.summary = {
             "n_sims": len(results),
             "n_rounds": len(self.rounds),
             "n_requests": sum(r.n_requests for r in self.rounds),
+            "n_solves": sum(r.n_solves for r in self.rounds),
             "batch_calls": sum(r.batch_calls for r in self.rounds),
             "mean_batch_occupancy": self.mean_batch_occupancy,
             "cache_hit_rate": self.cache_hit_rate,
@@ -81,6 +88,19 @@ class FleetTelemetry:
             "events": total_events,
             "events_per_s": total_events / wall_seconds if wall_seconds else None,
             "unfinished": sum(r.unfinished for r in results),
+            # intra-round speculation across the whole fleet: accepted solves
+            # were reused verbatim, repaired ones fell back to an exact
+            # re-solve (see OnlineScheduler.schedule_round)
+            "speculation": {
+                "rounds": sum(r.spec_rounds for r in results),
+                "accepted": spec_accepted,
+                "repaired": spec_repaired,
+                "accept_rate": (
+                    spec_accepted / (spec_accepted + spec_repaired)
+                    if spec_accepted + spec_repaired
+                    else None
+                ),
+            },
             "scenarios": {
                 name: {
                     "sims": len(group),

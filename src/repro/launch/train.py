@@ -92,7 +92,10 @@ def main(argv=None) -> dict:
         ck.save(args.steps, state)
         ck.wait()
     data.close()
-    return {"first_loss": losses[0] if losses else None, "last_loss": losses[-1] if losses else None}
+    return {
+        "first_loss": losses[0] if losses else None,
+        "last_loss": losses[-1] if losses else None,
+    }
 
 
 if __name__ == "__main__":

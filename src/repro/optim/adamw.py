@@ -65,7 +65,11 @@ def init_state(cfg: AdamWConfig, params) -> dict:
     # factored: v_r has the column dim reduced away, v_c the row dim; 1-D
     # leaves keep a full v in v_r (v_c is a zero-size stub).
     v_r = jax.tree.map(
-        lambda p: jnp.zeros(p.shape[:-1], jnp.float32) if _factorable(p) else jnp.zeros(p.shape, jnp.float32),
+        lambda p: (
+            jnp.zeros(p.shape[:-1], jnp.float32)
+            if _factorable(p)
+            else jnp.zeros(p.shape, jnp.float32)
+        ),
         params,
     )
     v_c = jax.tree.map(

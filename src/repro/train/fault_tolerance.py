@@ -91,7 +91,9 @@ def plan_elastic_remesh(
     # data axis must stay a power of two for clean batch resharding
     data = 2 ** int(math.log2(data)) if data else 0
     used = pods * data * model_parallel
-    return RemeshPlan(data=data, model=model_parallel, pods=pods, dropped_chips=surviving_chips - used)
+    return RemeshPlan(
+        data=data, model=model_parallel, pods=pods, dropped_chips=surviving_chips - used
+    )
 
 
 def reshard_like(tree, shardings):

@@ -7,6 +7,7 @@ import pytest
 from repro.core import (
     JRBAEngine,
     OnlineScheduler,
+    RoundRequest,
     SCENARIOS,
     SolveRequest,
     random_edge_network,
@@ -171,29 +172,37 @@ def test_solve_many_batch_padding_caches_drain():
 # ---------------------------------------------------------------------------
 # The resumable stepper protocol run() and the fleet both drive
 # ---------------------------------------------------------------------------
-def test_stepper_manual_drive_matches_run():
+@pytest.mark.parametrize("policy", ["OTFA", "OTFS"])
+def test_stepper_manual_drive_matches_run(policy):
     net, arrivals = SCENARIOS["edge-mesh"].build(seed=3, n_jobs=4)
     engine = JRBAEngine(k=3, n_iters=120)
-    sched = OnlineScheduler(net, "OTFA", k_paths=3, jrba_iters=120, engine=engine)
+    sched = OnlineScheduler(net, policy, k_paths=3, jrba_iters=120, engine=engine)
     stepper = sched.step(arrivals)
     requests = 0
     try:
         req = next(stepper)
         while True:
-            assert isinstance(req, SolveRequest)
-            assert req.net is net and len(req.flows) > 0
-            requests += 1
-            res = engine.solve(
-                req.net, req.flows, capacity=req.capacity,
-                water_filling=req.water_filling,
-            )
-            req = stepper.send((res, 0.0))
+            assert isinstance(req, RoundRequest)
+            assert len(req.solves) >= 1
+            results = []
+            for s in req.solves:
+                assert isinstance(s, SolveRequest)
+                assert s.net is net and len(s.flows) > 0
+                requests += 1
+                results.append(
+                    engine.solve(
+                        s.net, s.flows, capacity=s.capacity,
+                        water_filling=s.water_filling,
+                    )
+                )
+            req = stepper.send((results, 0.0))
     except StopIteration as stop:
         manual = stop.value
     assert requests > 0
+    assert manual.n_solves == requests
     net2, arrivals2 = SCENARIOS["edge-mesh"].build(seed=3, n_jobs=4)
     auto = OnlineScheduler(
-        net2, "OTFA", k_paths=3, jrba_iters=120, engine=engine
+        net2, policy, k_paths=3, jrba_iters=120, engine=engine
     ).run(arrivals2)
     assert [r.finish_time for r in manual.records] == [
         r.finish_time for r in auto.records

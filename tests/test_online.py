@@ -146,9 +146,11 @@ def test_otfs_requeues_job_until_capacity_frees():
     try:
         req = next(stepper)
         while True:
-            seen.append(req)
-            res = engine.solve(req.net, req.flows, capacity=req.capacity)
-            req = stepper.send((res, 0.0))
+            seen.extend(req.solves)
+            results = [
+                engine.solve(s.net, s.flows, capacity=s.capacity) for s in req.solves
+            ]
+            req = stepper.send((results, 0.0))
     except StopIteration as stop:
         result = stop.value
 

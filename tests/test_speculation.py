@@ -1,0 +1,170 @@
+"""Speculative intra-round OTFS batching must preserve *exact* sequential
+admission semantics: accepted speculations are bitwise the sequential
+solution (the residual on their candidate footprint never moved), repairs
+re-solve on the true residual, and no accepted solution may overcommit a
+link. The property test sweeps burst-arrival seeds; the crafted tests pin
+down the conflict machinery on a two-job shared-link bottleneck."""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import (
+    Flow,
+    JRBAEngine,
+    JobGraph,
+    NetworkGraph,
+    OnlineScheduler,
+    SCENARIOS,
+    Task,
+    link_load_fits,
+)
+
+BURST_SCENARIOS = ("edge-mesh-burst", "edge-mesh-flash", "wan-mesh")
+
+
+def _run(scenario, seed, n_jobs, *, speculate, n_iters=80):
+    net, arrivals = SCENARIOS[scenario].build(seed=seed, n_jobs=n_jobs)
+    engine = JRBAEngine(k=3, n_iters=n_iters)
+    sched = OnlineScheduler(
+        net, "OTFS", k_paths=3, jrba_iters=n_iters, engine=engine, speculate=speculate
+    )
+    return sched.run(arrivals)
+
+
+def _assert_records_identical(a, b):
+    """Batched-OTFS must reproduce the sequential records *exactly* — same
+    admissions at the same times with the same spans (not approximately)."""
+    assert a.n_events == b.n_events
+    assert a.unfinished == b.unfinished
+    for ra, rb in zip(a.records, b.records):
+        assert ra.scheduled == rb.scheduled
+        assert ra.schedule_time == rb.schedule_time
+        assert ra.finish_time == rb.finish_time
+        assert ra.span == rb.span
+        assert ra.initial_span == rb.initial_span
+
+
+# derandomize: equivalence requires the vmapped and scalar solver paths to
+# round argmax near-ties identically, which holds on scheduler workloads but
+# is not a JAX guarantee — pin the explored seeds so CI can't roam onto a
+# degenerate tie that would flake the exact-match assertion
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(
+    scenario=st.sampled_from(BURST_SCENARIOS),
+    seed=st.integers(min_value=0, max_value=31),
+)
+def test_speculative_otfs_matches_sequential_records(scenario, seed):
+    seq = _run(scenario, seed, 5, speculate=False)
+    spec = _run(scenario, seed, 5, speculate=True)
+    _assert_records_identical(seq, spec)
+    # sequential OTFS: one dispatch per solve; speculation never dispatches
+    # more rounds than it solves programs
+    assert seq.n_dispatches == seq.n_solves
+    assert spec.n_dispatches <= spec.n_solves
+    assert spec.spec_accepted + spec.spec_repaired <= spec.n_solves + seq.n_solves
+
+
+def test_speculation_collapses_dispatches_under_flash_crowd():
+    """The point of the feature: on a queue-building MMPP flash crowd the
+    batched rounds need far fewer solver dispatches than sequential OTFS
+    while producing identical records."""
+    seq = _run("edge-mesh-flash", 0, 16, speculate=False)
+    spec = _run("edge-mesh-flash", 0, 16, speculate=True)
+    _assert_records_identical(seq, spec)
+    assert spec.spec_accepted > 0
+    assert spec.spec_rounds > 0
+    assert spec.n_dispatches < seq.n_dispatches
+    assert 0.0 < spec.spec_accept_rate <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Crafted two-job link conflict: overcommit detection + repair
+# ---------------------------------------------------------------------------
+def _bottleneck_net_and_jobs(link_bw=2.0):
+    """Node 0 is a memoryless camera host, node 1 the only worker: every
+    job's single flow must cross the one link, so two jobs speculatively
+    solved against the same residual snapshot each claim the whole link."""
+    net = NetworkGraph([1.0, 100.0], [0.0, 8.0], [(0, 1, link_bw)])
+
+    def job(name):
+        return JobGraph(
+            [Task("source", 0.0, 0.0, pinned_node=0), Task("work", 10.0, 1.0)],
+            [(0, 1, 4.0)],
+            name=name,
+        )
+
+    return net, job
+
+
+def test_overcommit_detection_on_two_job_conflict():
+    """Both speculative solutions fit the snapshot individually, but after
+    admitting the first, the second's link load overcommits the residual —
+    exactly what ``link_load_fits`` must flag."""
+    net, job = _bottleneck_net_and_jobs()
+    engine = JRBAEngine(k=2, n_iters=100)
+    # build the two conflicting single-flow programs directly
+    flows_a = [Flow(0, 1, 4.0, job_id=0)]
+    flows_b = [Flow(0, 1, 4.0, job_id=1)]
+    res_a, res_b = engine.solve_many(
+        net, [flows_a, flows_b], capacities=[net.residual, net.residual]
+    )
+    # individually each fits the full residual
+    assert link_load_fits(res_a.link_load, net.residual)
+    assert link_load_fits(res_b.link_load, net.residual)
+    # the shared bottleneck is on both candidate footprints
+    assert np.any(res_a.candidate_links & res_b.candidate_links)
+    # after committing A, B's speculative load no longer fits
+    residual_after_a = np.maximum(net.residual - res_a.link_load, 0.0)
+    assert not link_load_fits(res_b.link_load, residual_after_a)
+    # and a crafted sub-load still passes (the detector is not all-or-nothing)
+    assert link_load_fits(res_b.link_load * 0.0, residual_after_a)
+
+
+def test_two_job_conflict_triggers_repair_and_matches_sequential():
+    """End to end on the bottleneck: when A's completion frees the link, the
+    round speculatively solves BOTH queued jobs against the freed residual;
+    admitting B consumes the whole link, so C's speculation overcommits and
+    must be repaired — landing on exactly the sequential outcome (C requeued
+    until B completes)."""
+
+    def arrivals_for(job):
+        return [(0.0, job("A"), 4.0), (1.0, job("B"), 4.0), (2.0, job("C"), 4.0)]
+
+    net_seq, job = _bottleneck_net_and_jobs()
+    seq = OnlineScheduler(
+        net_seq, "OTFS", k_paths=2, jrba_iters=100, speculate=False
+    ).run(arrivals_for(job))
+
+    net_spec, job = _bottleneck_net_and_jobs()
+    spec = OnlineScheduler(
+        net_spec, "OTFS", k_paths=2, jrba_iters=100, speculate=True
+    ).run(arrivals_for(job))
+
+    _assert_records_identical(seq, spec)
+    rec_a, rec_b, rec_c = spec.records
+    # serial admissions through the single link, each waiting for the last
+    assert rec_b.schedule_time == pytest.approx(rec_a.finish_time)
+    assert rec_c.schedule_time == pytest.approx(rec_b.finish_time)
+    # the conflicting speculation was repaired at least once, not accepted
+    assert spec.spec_repaired >= 1
+    assert spec.spec_accepted >= 1
+    # accepted speculations never overcommitted: residual stayed non-negative
+    assert np.all(net_spec.residual >= 0.0)
+
+
+def test_candidate_links_footprint():
+    """The engine's footprint helper must cover every candidate path's links
+    and ignore colocated/zero-volume flows."""
+    from repro.core import Flow, k_shortest_paths, path_links, random_edge_network
+
+    net = random_edge_network(10, mean_bandwidth=2.0, rng=np.random.RandomState(3))
+    engine = JRBAEngine(k=3, n_iters=50)
+    flows = [Flow(0, 5, 1.0, job_id=0), Flow(2, 2, 1.0, job_id=0), Flow(1, 4, 0.0)]
+    mask = engine.candidate_links(net, flows)
+    expect = np.zeros(len(net.links), dtype=bool)
+    for path in k_shortest_paths(net, 0, 5, 3):
+        expect[path_links(net, path)] = True
+    np.testing.assert_array_equal(mask, expect)
+    # the solver result's footprint agrees with the helper
+    res = engine.solve(net, flows, capacity=net.residual)
+    np.testing.assert_array_equal(res.candidate_links, mask)
