@@ -7,9 +7,11 @@ write-only artifacts.
 Two kinds of checks:
 
   * **Correctness caps** (always, including ``--smoke`` reports): the batch
-    and cosched span deviations stay within 1%, and the round_batch record
-    deviation stays exactly zero — speculative OTFS must reproduce
-    sequential admissions bit-for-bit at any scale.
+    and cosched span deviations stay within 1%, and the round_batch and
+    solver record deviations stay exactly zero — speculative OTFS must
+    reproduce sequential admissions bit-for-bit, and the sparse congestion
+    solver must reproduce dense-reference scheduler records bit-for-bit,
+    at any scale.
   * **Regression ratios** (only when BOTH reports are non-smoke, since smoke
     timings are meaningless): every tracked machine-relative metric —
     batch/cosched/round_batch speedups, batch occupancy, dispatch collapse,
@@ -55,6 +57,11 @@ def _ratio_metrics(report: dict, *, absolute: bool = False) -> dict[str, float]:
         for metric in ("speedup_wall_clock", "dispatch_collapse", "spec_accept_rate"):
             if row.get(metric) is not None:
                 out[f"{key}.{metric}"] = row[metric]
+    # solver speedups are deliberately NOT ratio-gated: on small-L
+    # topologies the solver is dispatch-bound (its ~1x ratio swings with
+    # host load), and even the compute-dominated wan-mesh-xl ratio moves
+    # ~±30% run to run — the acceptance floor is enforced as an absolute
+    # cap in _check_caps instead
     return out
 
 
@@ -74,10 +81,31 @@ def _check_caps(report: dict, label: str) -> list[str]:
                 f"{label}: round_batch[{row['scenario']}].max_record_rel_dev "
                 f"{dev:.3e} != 0 (speculation broke sequential semantics)"
             )
+    for row in report.get("solver", []):
+        dev = row.get("max_record_rel_dev")
+        if dev is not None and dev != 0.0:
+            failures.append(
+                f"{label}: solver[{row['scenario']}].max_record_rel_dev "
+                f"{dev:.3e} != 0 (sparse solver broke dense-rounding semantics)"
+            )
+        # absolute acceptance floor (timings are meaningless in smoke runs):
+        # the sparse solver must stay >= 3x on the large-L WAN where the
+        # dense formulation pays per-link per-step
+        speedup = row.get("speedup_solve_stage")
+        if (
+            not report.get("smoke")
+            and row.get("scenario") == "wan-mesh-xl"
+            and speedup is not None
+            and speedup < 3.0
+        ):
+            failures.append(
+                f"{label}: solver[wan-mesh-xl].speedup_solve_stage "
+                f"{speedup:.2f}x < 3x acceptance floor"
+            )
     return failures
 
 
-REQUIRED_SECTIONS = ("scenarios", "batch", "cosched", "round_batch")
+REQUIRED_SECTIONS = ("scenarios", "batch", "cosched", "round_batch", "solver")
 
 
 def compare(

@@ -15,12 +15,37 @@ temperature-annealed logsumexp smoothing of the max — jit-compiled,
 vmap-friendly, no external solver. Rounding and Eq. 15 follow the paper
 verbatim; the optional water-filling top-up (beyond-paper, see DESIGN.md §4)
 redistributes capacity stranded by Eq. 15 and is reported separately.
+
+Two solver formulations share that math:
+
+* **dense** — the original reference: a ``(Nf, K, L)`` usage einsum per Adam
+  step, autodiff gradient, fixed ``n_iters`` schedule. Byte-stable, kept as
+  the cross-check oracle.
+* **sparse** — the production path: each candidate path crosses only a
+  handful of links, so the congestion vector is supported on the *active
+  link set* (every link on any candidate path, derived from the padded
+  path->link index tensor ``FlowProgram.link_idx``). The solver runs on
+  tensors compressed to ``La_pad`` active-link slots (power-of-two bucketed;
+  the L - La_pad inactive links contribute exactly ``exp(-max_c/tau)`` each
+  to the softmax denominator, folded in as one scalar correction, so the
+  objective equals the dense one), with a hand-fused gradient (no autodiff
+  tape) and a convergence-adaptive schedule: the tau anneal runs in chunks
+  under ``lax.while_loop`` and exits once the exact span plateaus. On TPU
+  the per-chunk step loop additionally runs as the fused Pallas kernel in
+  ``repro.kernels.jrba_congestion``.
+
+``JRBAEngine`` picks the formulation per backend (``solver="auto"``:
+Pallas on TPU, sparse-jnp elsewhere; ``REPRO_JRBA_SOLVER`` overrides), and
+adds a per-program tensor cache so repeated solves of the same flow set —
+the OTFS re-solve loop — rebuild nothing and re-upload only capacity.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import itertools
+import os
 import time
 import weakref
 from typing import Sequence
@@ -30,7 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .graph import Flow, NetworkGraph
-from .paths import k_shortest_paths, path_links
+from .paths import k_shortest_paths, path_link_index, path_links
 
 __all__ = [
     "EngineStats",
@@ -40,12 +65,39 @@ __all__ = [
     "build_program",
     "solve_relaxation",
     "solve_relaxation_batch",
+    "solve_relaxation_sparse",
+    "solve_relaxation_sparse_batch",
     "jrba",
     "jrba_batch",
     "link_load_fits",
     "water_fill",
     "brute_force_span",
 ]
+
+SOLVERS = ("dense", "sparse", "pallas", "pallas-interpret")
+
+
+def resolve_solver(solver: str = "auto") -> str:
+    """Map ``"auto"`` (after the ``REPRO_JRBA_SOLVER`` env override) to the
+    backend-appropriate formulation: the fused Pallas kernel on TPU, the
+    sparse jnp path everywhere else."""
+    if solver == "auto":
+        solver = os.environ.get("REPRO_JRBA_SOLVER", "auto")
+    if solver == "auto":
+        solver = "pallas" if jax.default_backend() == "tpu" else "sparse"
+    if solver not in SOLVERS:
+        raise ValueError(f"unknown solver {solver!r}; one of {('auto', *SOLVERS)}")
+    return solver
+
+
+def _clamp_capacity(net: NetworkGraph, capacity: np.ndarray | None) -> np.ndarray:
+    """Solver-facing capacity vector: f32, floored at 1e-9. One definition,
+    shared by :func:`build_program` and the engine's program-cache hit path —
+    the OTFS speculation staleness check (``online.spec_exact``) compares
+    residuals through this exact clamp, so the two construction paths must
+    never diverge."""
+    cap = (net.capacity if capacity is None else capacity).astype(np.float32)
+    return np.maximum(cap, 1e-9)
 
 
 @dataclasses.dataclass
@@ -55,7 +107,15 @@ class FlowProgram:
     Rows may be padded with zero-volume dummy flows (``n_real`` marks the
     real prefix) so the jitted solver sees shape-stable inputs — the online
     scheduler calls JRBA with a constantly-changing flow count, and without
-    padding every call would retrace/retranspile."""
+    padding every call would retrace/retranspile.
+
+    Alongside the dense ``usage`` tensor the program carries the sparse
+    formulation: ``link_idx`` (the padded path->link index tensor), the
+    active link set, and the active-compressed usage/index tensors the
+    sparse solver actually consumes. Everything except ``capacity``,
+    ``volumes`` and ``flows`` depends only on topology + candidate paths, so
+    the engine's program cache shares these tensors (and their device
+    mirrors in ``dev``) across every re-solve of the same flow set."""
 
     usage: np.ndarray  # (Nf, K, L) 0/1 — path k of flow i crosses link l
     valid: np.ndarray  # (Nf, K) bool
@@ -64,6 +124,32 @@ class FlowProgram:
     paths: list[list[list[int]]]  # node paths, paths[i][k]
     flows: list[Flow]
     n_real: int
+    link_idx: np.ndarray  # (Nf, K, Pmax) int32; padding slots hold L
+    active_links: np.ndarray  # (La,) int32 — links on any candidate path
+    usage_active: np.ndarray  # (Nf, K, La_pad) — usage gathered to active slots
+    ridx: np.ndarray  # (Nf, K, Pmax) int32 remapped to [0, La_pad]
+    # lazily-populated device mirrors of the solve-invariant tensors above;
+    # shared (same dict object) across cache-replayed copies of this program
+    dev: dict = dataclasses.field(default_factory=dict, repr=False, compare=False)
+
+    def device(self, name: str) -> jax.Array:
+        """Device-resident mirror of a solve-invariant tensor, uploaded once
+        per program signature (not once per solve)."""
+        arr = self.dev.get(name)
+        if arr is None:
+            arr = self.dev[name] = jnp.asarray(getattr(self, name))
+        return arr
+
+    @property
+    def la_pad(self) -> int:
+        return self.usage_active.shape[-1]
+
+    def capacity_active(self) -> np.ndarray:
+        """Current capacity gathered to the active-link slots (padding slots
+        get capacity 1 and zero usage, i.e. exactly zero congestion)."""
+        cap = np.ones(self.la_pad, dtype=np.float32)
+        cap[: len(self.active_links)] = self.capacity[self.active_links]
+        return cap
 
 
 def build_program(
@@ -113,15 +199,33 @@ def build_program(
                 usage[i, kk, l] = 1.0
     volumes = np.zeros((Nf,), dtype=np.float32)
     volumes[:n_real] = [f.volume for f in flows]
-    cap = (net.capacity if capacity is None else capacity).astype(np.float32)
+    cap = _clamp_capacity(net, capacity)
+    # sparse formulation: padded path->link index tensor + active-link
+    # compression (see module docstring). La pads to a power of two (capped
+    # at L) so the jitted sparse solver sees O(log L) distinct shapes.
+    link_idx = path_link_index(net, all_paths, k=k, rows=Nf)
+    active = np.unique(link_idx[link_idx < L]).astype(np.int32)
+    la = int(active.size)
+    la_pad = 8
+    while la_pad < la:
+        la_pad *= 2
+    la_pad = min(la_pad, L)
+    remap = np.full(L + 1, la_pad, dtype=np.int32)
+    remap[active] = np.arange(la, dtype=np.int32)
+    usage_active = np.zeros((Nf, k, la_pad), dtype=np.float32)
+    usage_active[:, :, :la] = usage[:, :, active]
     return FlowProgram(
         usage=usage,
         valid=valid,
         volumes=volumes,
-        capacity=np.maximum(cap, 1e-9),
+        capacity=cap,
         paths=all_paths,
         flows=flows,
         n_real=n_real,
+        link_idx=link_idx,
+        active_links=active,
+        usage_active=usage_active,
+        ridx=remap[link_idx],
     )
 
 
@@ -185,17 +289,250 @@ def _solve_md_batched(
     return jax.vmap(solve)(usage, valid, volumes, capacity)
 
 
+# ---------------------------------------------------------------------------
+# Sparse congestion solver: active-link compression + fused gradient +
+# convergence-adaptive chunked schedule
+# ---------------------------------------------------------------------------
+def probe_schedule(n_iters: int) -> tuple[int, int]:
+    """Chunk layout ``(n_chunks, chunk_steps)`` for the adaptive solver: the
+    most chunks (<= 16) that divide ``n_iters`` evenly while keeping >= 25
+    steps per chunk — the granularity the early-exit criterion was validated
+    at. A run that never converges walks every chunk and matches the dense
+    schedule step for step (best case: ``(stable_chunks + 1) * chunk_steps``
+    steps)."""
+    best = 1
+    for c in range(1, min(16, n_iters) + 1):
+        if n_iters % c == 0 and n_iters // c >= 25:
+            best = c
+    return best, n_iters // best
+
+
+def _converged(ci_next, stable, span, prev_span, span_rtol, min_chunks, stable_chunks):
+    """Chunk-boundary early-exit criterion, shared by the jnp driver below
+    and the Pallas chunk driver in ``kernels.jrba_congestion`` — the two
+    backends must agree on when a solve is allowed to stop or they would
+    round differently. Elementwise over lanes: converged iff enough chunks
+    ran, the argmax rounding was stable for ``stable_chunks`` consecutive
+    boundaries, and the exact span plateaued within ``span_rtol``."""
+    return jnp.logical_and(
+        jnp.logical_and(ci_next >= min_chunks, stable >= stable_chunks),
+        jnp.abs(span - prev_span) <= span_rtol * jnp.maximum(span, 1e-12),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "early_exit"))
+def _solve_sparse_batched(
+    usage_a: jax.Array,  # (B, Nf, K, La_pad) — usage over active-link slots
+    valid: jax.Array,  # (B, Nf, K)
+    volumes: jax.Array,  # (B, Nf)
+    cap_a: jax.Array,  # (B, La_pad) — capacity on active slots (padding: 1)
+    n_outside: jax.Array,  # (B,): L - La_pad inactive links (denominator fold)
+    n_iters: int = 400,
+    lr: float = 0.25,
+    early_exit: bool = True,
+    span_rtol: float = 2e-2,
+    stable_chunks: int = 2,
+    min_chunks: int = 2,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Sparse twin of :func:`_solve_md_impl` (B lanes in one compiled call;
+    the scalar path is just B == 1). Same Adam-on-logits math, but:
+
+    * congestion lives on the La_pad active-link slots only — each step is
+      O(Nf*K*La) instead of O(Nf*K*L), and the L - La_pad zero-congestion
+      links enter the softmax denominator as one closed-form scalar
+      (``n_outside * exp(-max_c / tau)``), so the objective is exactly the
+      dense one;
+    * the gradient is hand-fused (softmax-of-congestion gathered back onto
+      the usage support) instead of an autodiff tape over the smoothed
+      objective;
+    * the schedule is convergence-adaptive (see :func:`probe_schedule` and
+      :func:`_converged`): a lane exits at a chunk boundary once it has
+      *converged in the sense the scheduler consumes it* — the rounding
+      ``argmax_k w`` unchanged across ``stable_chunks`` consecutive chunk
+      boundaries (a single agreement is not enough: at warm tau ``w`` is
+      near-uniform and its argmax is stable-looking noise that a later
+      anneal chunk can flip) and the exact (unsmoothed) span plateaued
+      within ``span_rtol``. Converged lanes freeze (masked updates), so
+      their results match the B == 1 trajectory; the ``lax.while_loop``
+      ends when every lane converged or the budget is spent, so the device
+      work of a batch is governed by its slowest lane.
+
+    Returns ``(w, exact_span, steps_taken)`` with per-lane step counts.
+    """
+    B = usage_a.shape[0]
+    neg_inf = jnp.float32(-1e9)
+    mask = jnp.where(valid, 0.0, neg_inf)
+
+    def congestion(w):  # (B, Nf, K) -> (B, La)
+        return jnp.einsum("bi,bik,bikl->bl", volumes, w, usage_a) / cap_a
+
+    pc, ps = probe_schedule(n_iters)
+    probe_steps = pc * ps
+    taus = jnp.geomspace(1.0, 1e-3, n_iters)
+    taus_probe = taus[:probe_steps].reshape(pc, ps)
+
+    def step(carry, tau):
+        logits, m, v, t = carry
+        w = jax.nn.softmax(logits + mask, axis=-1)
+        c = congestion(w)
+        maxc = jnp.max(c, axis=-1, keepdims=True)  # (B, 1)
+        e = jnp.exp((c - maxc) / tau)
+        denom = e.sum(axis=-1, keepdims=True) + n_outside[:, None] * jnp.exp(-maxc / tau)
+        # d obj / d load_l = softmax(c/tau)_l / B_l, gathered onto the usage
+        # support; then the softmax Jacobian maps it back to logits
+        glink = (e / denom) / cap_a
+        gw = volumes[:, :, None] * jnp.einsum("bikl,bl->bik", usage_a, glink)
+        g = w * (gw - (w * gw).sum(-1, keepdims=True))
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        mh = m / (1 - 0.9 ** (t + 1))
+        vh = v / (1 - 0.999 ** (t + 1))
+        logits = logits - lr * mh / (jnp.sqrt(vh) + 1e-8)
+        return (logits, m, v, t + 1), None
+
+    z = jnp.zeros_like(mask)
+
+    def chunk(state):
+        logits, m, v, ci, span, ks, stable, done, steps = state
+        (l2, m2, v2, _), _ = jax.lax.scan(step, (logits, m, v, ci * ps), taus_probe[ci])
+        keep = done[:, None, None]
+        logits = jnp.where(keep, logits, l2)
+        m = jnp.where(keep, m, m2)
+        v = jnp.where(keep, v, v2)
+        sp = jnp.max(congestion(jax.nn.softmax(logits + mask, axis=-1)), axis=-1)
+        new_span = jnp.where(done, span, sp)
+        new_ks = jnp.argmax(logits + mask, axis=-1).astype(jnp.int32)
+        stable = jnp.where(jnp.all(new_ks == ks, axis=-1), stable + 1, 0)
+        steps = jnp.where(done, steps, (ci + 1) * ps)
+        if early_exit:
+            conv = _converged(ci + 1, stable, new_span, span, span_rtol, min_chunks, stable_chunks)
+            done = jnp.logical_or(done, conv)
+        return (logits, m, v, ci + 1, new_span, new_ks, stable, done, steps)
+
+    def probing(state):
+        return jnp.logical_and(state[3] < pc, jnp.logical_not(jnp.all(state[7])))
+
+    init = (
+        z,
+        z,
+        z,
+        0,
+        jnp.full((B,), jnp.inf, jnp.float32),
+        jnp.full((B, valid.shape[1]), -1, jnp.int32),
+        jnp.zeros((B,), jnp.int32),
+        jnp.zeros((B,), bool),
+        jnp.zeros((B,), jnp.int32),
+    )
+    logits, _, _, _, span, _, _, done, steps = jax.lax.while_loop(probing, chunk, init)
+    steps = jnp.where(done, steps, n_iters)
+    return jax.nn.softmax(logits + mask, axis=-1), span, steps
+
+
 def solve_relaxation(prog: FlowProgram, *, n_iters: int = 400) -> tuple[np.ndarray, float]:
     """Solve P3-RELAX-CVX; returns (m_i^k = V_i w_i^k, relaxed span TH*)."""
     w, span = _solve_md(
-        jnp.asarray(prog.usage),
-        jnp.asarray(prog.valid),
-        jnp.asarray(prog.volumes),
+        prog.device("usage"),
+        prog.device("valid"),
+        prog.device("volumes"),
         jnp.asarray(prog.capacity),
         n_iters=n_iters,
     )
+    w, span = jax.device_get((w, span))
     m = np.asarray(w) * prog.volumes[:, None]
     return m, float(span)
+
+
+def _sparse_dispatch(backend: str, interpret: bool):
+    if backend == "pallas":
+        from ..kernels.jrba_congestion import sparse_congestion_solve
+
+        return functools.partial(sparse_congestion_solve, interpret=interpret)
+    return None
+
+
+def solve_relaxation_sparse(
+    prog: FlowProgram,
+    *,
+    n_iters: int = 400,
+    early_exit: bool = True,
+    span_rtol: float = 2e-2,
+    stable_chunks: int = 2,
+    backend: str = "jnp",
+    interpret: bool = False,
+) -> tuple[np.ndarray, float, int]:
+    """Sparse solve of one program; returns ``(m, relaxed_span, steps)``.
+
+    ``backend="pallas"`` routes the chunked step loop through the fused
+    Pallas kernel (``interpret=True`` for CPU validation); ``"jnp"`` is the
+    pure-XLA path. Both consume the program's device-memoized
+    solve-invariant tensors — only capacity is uploaded per solve. The
+    B == 1 lane of the batched solver IS the scalar path, so scalar and
+    batched solves share one compiled structure."""
+    cap_a = jnp.asarray(prog.capacity_active())
+    n_out = jnp.float32(len(prog.capacity) - prog.la_pad)
+    kernel = _sparse_dispatch(backend, interpret)
+    solver = kernel if kernel is not None else _solve_sparse_batched
+    lead = prog.device("ridx") if kernel is not None else prog.device("usage_active")
+    w, span, steps = solver(
+        lead[None],
+        prog.device("valid")[None],
+        prog.device("volumes")[None],
+        cap_a[None],
+        n_out[None],
+        n_iters=n_iters,
+        early_exit=early_exit,
+        span_rtol=span_rtol,
+        stable_chunks=stable_chunks,
+    )
+    w, span, steps = jax.device_get((w[0], span[0], steps[0]))
+    m = np.asarray(w) * prog.volumes[:, None]
+    return m, float(span), int(steps)
+
+
+def solve_relaxation_sparse_batch(
+    progs: list[FlowProgram],
+    *,
+    n_iters: int = 400,
+    early_exit: bool = True,
+    span_rtol: float = 2e-2,
+    stable_chunks: int = 2,
+    backend: str = "jnp",
+    interpret: bool = False,
+) -> list[tuple[np.ndarray, float, int]]:
+    """Sparse twin of :func:`solve_relaxation_batch`; one vmapped (or
+    Pallas-gridded) dispatch for N same-shape programs, one device sync for
+    all results. Programs must share the (Nf, K, La_pad) bucket — plus Pmax
+    for the Pallas backend, whose kernel shape includes the hop axis (the
+    jnp path never touches the index tensor, so mixed-Pmax groups batch)."""
+    kernel = _sparse_dispatch(backend, interpret)
+    shapes = {(p.valid.shape, p.la_pad) + ((p.ridx.shape[-1],) if kernel else ()) for p in progs}
+    if len(shapes) != 1:
+        raise ValueError(f"programs span multiple sparse buckets: {sorted(shapes)}")
+    # host-side stack + one upload per operand (see solve_relaxation_batch)
+    valid = jnp.asarray(np.stack([p.valid for p in progs]))
+    volumes = jnp.asarray(np.stack([p.volumes for p in progs]))
+    cap_a = jnp.asarray(np.stack([p.capacity_active() for p in progs]))
+    n_out = jnp.asarray(
+        np.array([len(p.capacity) - p.la_pad for p in progs], dtype=np.float32)
+    )
+    solver = kernel if kernel is not None else _solve_sparse_batched
+    lead = np.stack([p.ridx if kernel is not None else p.usage_active for p in progs])
+    w, spans, steps = solver(
+        jnp.asarray(lead),
+        valid,
+        volumes,
+        cap_a,
+        n_out,
+        n_iters=n_iters,
+        early_exit=early_exit,
+        span_rtol=span_rtol,
+        stable_chunks=stable_chunks,
+    )
+    w, spans, steps = jax.device_get((w, spans, steps))
+    return [
+        (np.asarray(w[i]) * p.volumes[:, None], float(spans[i]), int(steps[i]))
+        for i, p in enumerate(progs)
+    ]
 
 
 def solve_relaxation_batch(
@@ -209,6 +546,9 @@ def solve_relaxation_batch(
     shapes = {p.usage.shape for p in progs}
     if len(shapes) != 1:
         raise ValueError(f"programs span multiple shape buckets: {sorted(shapes)}")
+    # host-side stack + one upload per operand: stacking device-resident
+    # mirrors costs a dispatch per operand, which for these small tensors is
+    # slower than the copy (the device memo pays off on the scalar paths)
     w, spans = _solve_md_batched(
         jnp.asarray(np.stack([p.usage for p in progs])),
         jnp.asarray(np.stack([p.valid for p in progs])),
@@ -216,9 +556,10 @@ def solve_relaxation_batch(
         jnp.asarray(np.stack([p.capacity for p in progs])),
         n_iters=n_iters,
     )
-    w, spans = np.asarray(w), np.asarray(spans)
+    w, spans = jax.device_get((w, spans))
     return [
-        (w[i] * p.volumes[:, None], float(spans[i])) for i, p in enumerate(progs)
+        (np.asarray(w[i]) * p.volumes[:, None], float(spans[i]))
+        for i, p in enumerate(progs)
     ]
 
 
@@ -227,15 +568,14 @@ def solve_relaxation_batch(
 # ---------------------------------------------------------------------------
 def _eq15_bandwidth(sel_usage: np.ndarray, volumes: np.ndarray, capacity: np.ndarray) -> np.ndarray:
     """Paper Eq. 15: on each link, capacity splits across crossing flows in
-    proportion to volume; a flow gets the min share along its route."""
+    proportion to volume; a flow gets the min share along its route.
+    Vectorized masked min (it runs on every finalize): flows crossing no
+    link get an infinite share, matching the per-flow loop it replaced."""
     crossing = sel_usage.T @ volumes  # (L,) total volume through each link
     with np.errstate(divide="ignore", invalid="ignore"):
         share = np.where(crossing > 0, capacity / crossing, np.inf)  # (L,) per-unit-volume
-    b = np.empty(len(volumes))
-    for i in range(len(volumes)):
-        links = sel_usage[i] > 0
-        b[i] = volumes[i] * (share[links].min() if links.any() else np.inf)
-    return b
+    row_share = np.where(sel_usage > 0, share[None, :], np.inf).min(axis=1, initial=np.inf)
+    return (volumes * row_share).astype(np.float64)
 
 
 def water_fill(
@@ -377,13 +717,25 @@ def jrba(
     n_iters: int = 400,
     water_filling: bool = False,
     refine: bool = True,
+    solver: str = "auto",
 ) -> JRBAResult | None:
     """Algorithm 2. ``capacity`` overrides link capacity (the online scheduler
-    passes residual capacity for OTFS and full capacity for OTFA re-runs)."""
+    passes residual capacity for OTFS and full capacity for OTFA re-runs).
+    ``solver`` follows the engine's backend resolution; pass ``"dense"`` for
+    the byte-stable reference formulation."""
     prog = build_program(net, flows, k=k, capacity=capacity)
     if prog is None:
         return None
-    m, relaxed = solve_relaxation(prog, n_iters=n_iters)
+    solver = resolve_solver(solver)
+    if solver == "dense":
+        m, relaxed = solve_relaxation(prog, n_iters=n_iters)
+    else:
+        m, relaxed, _ = solve_relaxation_sparse(
+            prog,
+            n_iters=n_iters,
+            backend="pallas" if solver.startswith("pallas") else "jnp",
+            interpret=solver == "pallas-interpret",
+        )
     return _finalize(prog, m, relaxed, water_filling=water_filling, refine=refine)
 
 
@@ -393,7 +745,12 @@ def jrba(
 @dataclasses.dataclass
 class EngineStats:
     """Observability for the solver cache (`hits`/`misses` count shape-bucket
-    signatures: a miss triggers an XLA trace+compile, a hit reuses it)."""
+    signatures: a miss triggers an XLA trace+compile, a hit reuses it) and
+    the convergence-adaptive sparse solver (per-lane semantic steps vs the
+    fixed budget the dense schedule would have burned — a lockstep batch's
+    device work is governed by its slowest live lane, and batch-padding
+    lanes are excluded; ``fast_path_solves`` are single-flow programs
+    rounded host-side with no relaxation at all)."""
 
     single_solves: int = 0
     batched_solves: int = 0  # compiled batch calls
@@ -401,6 +758,11 @@ class EngineStats:
     cache_hits: int = 0
     cache_misses: int = 0
     solve_seconds: float = 0.0
+    solver_steps: int = 0  # relaxation steps actually run (early exit counted)
+    solver_step_budget: int = 0  # n_iters * relaxation solves (the dense cost)
+    fast_path_solves: int = 0  # single-flow programs solved analytically
+    prog_cache_hits: int = 0  # program-tensor cache: no rebuild, no re-upload
+    prog_cache_misses: int = 0
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -423,17 +785,52 @@ class JRBAEngine:
 
     The engine is deliberately topology-agnostic: programs built on different
     networks (different L) simply land in different buckets.
+
+    ``solver`` picks the relaxation formulation (see module docstring):
+    ``"auto"`` resolves via :func:`resolve_solver` (``REPRO_JRBA_SOLVER``
+    env override, then Pallas on TPU / sparse-jnp elsewhere); ``"dense"``
+    forces the byte-stable reference. Sparse modes additionally take the
+    analytic fast path for single-flow programs — the best-response sweep
+    finds the global min-congestion path from any start when there is only
+    one flow, so the rounded result provably equals the dense pipeline's
+    with zero relaxation steps.
+
+    A per-network **program cache** (keyed by the kept flows' (src, dst,
+    volume) signature and shape bucket) replays the solve-invariant tensors
+    — dense/sparse usage, index tensors, candidate paths, and their device
+    mirrors — so the OTFS re-solve loop (same job, shrinking residual)
+    rebuilds nothing and re-uploads only the capacity vector.
     """
 
-    def __init__(self, *, k: int = 4, n_iters: int = 400, min_bucket: int = 8) -> None:
+    def __init__(
+        self,
+        *,
+        k: int = 4,
+        n_iters: int = 400,
+        min_bucket: int = 8,
+        solver: str = "auto",
+        early_exit: bool = True,
+        span_rtol: float = 2e-2,
+        stable_chunks: int = 2,
+        prog_cache_size: int = 256,
+    ) -> None:
         self.k = k
         self.n_iters = n_iters
         self.min_bucket = min_bucket
+        self.solver = resolve_solver(solver)
+        self.early_exit = early_exit
+        self.span_rtol = span_rtol
+        self.stable_chunks = stable_chunks
+        self.prog_cache_size = prog_cache_size
         self.stats = EngineStats()
         self._seen_shapes: set[tuple] = set()
         # per-network (src, dst, k) -> candidate paths; weak keys so dropping
         # a topology frees its cache
         self._paths: "weakref.WeakKeyDictionary[NetworkGraph, dict]" = (
+            weakref.WeakKeyDictionary()
+        )
+        # per-network LRU of solve-invariant program tensors
+        self._progs: "weakref.WeakKeyDictionary[NetworkGraph, collections.OrderedDict]" = (
             weakref.WeakKeyDictionary()
         )
 
@@ -451,6 +848,19 @@ class JRBAEngine:
             self._seen_shapes.add(key)
             self.stats.cache_misses += 1
 
+    def _shape_key(self, prog: FlowProgram) -> tuple:
+        """Compiled-signature key of one program under the active solver.
+        Sparse solves never see L, so instances from different topologies
+        share a signature whenever their active-compressed shapes agree;
+        only the Pallas kernel additionally specializes on the hop axis
+        (Pmax) of the index tensor."""
+        if self.solver == "dense":
+            return prog.usage.shape
+        key = ("sp", *prog.valid.shape, prog.la_pad)
+        if self.solver.startswith("pallas"):
+            key += (prog.ridx.shape[-1],)
+        return key
+
     def build(
         self,
         net: NetworkGraph,
@@ -458,22 +868,41 @@ class JRBAEngine:
         *,
         capacity: np.ndarray | None = None,
     ) -> FlowProgram | None:
-        cache = self._paths.get(net)
-        if cache is None:
-            cache = self._paths.setdefault(net, {})
         # mirror build_program's flow filter so the bucket is known up front
         # and the program is built exactly once
-        n_real = sum(1 for f in flows if f.src != f.dst and f.volume > 0)
-        if n_real == 0:
+        kept = [f for f in flows if f.src != f.dst and f.volume > 0]
+        if not kept:
             return None
-        return build_program(
+        bucket = self.bucket(len(kept))
+        progs = self._progs.get(net)
+        if progs is None:
+            progs = self._progs.setdefault(net, collections.OrderedDict())
+        key = (tuple((f.src, f.dst, f.volume) for f in kept), bucket)
+        ent = progs.get(key)
+        if ent is not None:
+            progs.move_to_end(key)
+            self.stats.prog_cache_hits += 1
+            cap = _clamp_capacity(net, capacity)
+            # share every solve-invariant tensor (and the device-mirror dict)
+            # with the cached program; only capacity and the caller's Flow
+            # objects are fresh
+            return dataclasses.replace(ent, capacity=cap, flows=kept)
+        paths = self._paths.get(net)
+        if paths is None:
+            paths = self._paths.setdefault(net, {})
+        prog = build_program(
             net,
             flows,
             k=self.k,
             capacity=capacity,
-            pad_to=self.bucket(n_real),
-            path_cache=cache,
+            pad_to=bucket,
+            path_cache=paths,
         )
+        self.stats.prog_cache_misses += 1
+        progs[key] = prog
+        while len(progs) > self.prog_cache_size:
+            progs.popitem(last=False)
+        return prog
 
     def candidate_links(self, net: NetworkGraph, flows: list[Flow]) -> np.ndarray:
         """Bool mask over links of every candidate path of ``flows`` — the
@@ -497,6 +926,69 @@ class JRBAEngine:
                 mask[path_links(net, path)] = True
         return mask
 
+    def _use_fast_path(self, prog: FlowProgram, refine: bool) -> bool:
+        return self.solver != "dense" and refine and prog.n_real == 1
+
+    def _fast_single(self, prog: FlowProgram, water_filling: bool) -> JRBAResult:
+        """Analytic single-flow solve: with one flow the best-response sweep
+        in :func:`_finalize` picks the globally min-congestion candidate path
+        from any starting ``k`` (first argmin on ties), which is exactly
+        where the dense argmax-round-then-refine pipeline lands — so skip
+        the relaxation entirely. The span certificate equals the rounded
+        span (the LP could split traffic lower; nothing downstream consumes
+        the certificate)."""
+        m0 = np.where(prog.valid, prog.volumes[:, None], -1.0)
+        res = _finalize(prog, m0, 0.0, water_filling=water_filling, refine=True)
+        res.relaxed_span = res.span
+        self.stats.fast_path_solves += 1
+        return res
+
+    def _relax_one(self, prog: FlowProgram) -> tuple[np.ndarray, float]:
+        """Solver-mode dispatch for one program (stats included)."""
+        if self.solver == "dense":
+            m, relaxed = solve_relaxation(prog, n_iters=self.n_iters)
+            steps = self.n_iters
+        else:
+            m, relaxed, steps = solve_relaxation_sparse(
+                prog,
+                n_iters=self.n_iters,
+                early_exit=self.early_exit,
+                span_rtol=self.span_rtol,
+                stable_chunks=self.stable_chunks,
+                backend="pallas" if self.solver.startswith("pallas") else "jnp",
+                interpret=self.solver == "pallas-interpret",
+            )
+        self.stats.solver_steps += steps
+        self.stats.solver_step_budget += self.n_iters
+        return m, relaxed
+
+    def _relax_group(
+        self, progs: list[FlowProgram], n_real: int | None = None
+    ) -> list[tuple[np.ndarray, float]]:
+        """Solver-mode dispatch for one same-bucket batch (stats included).
+        ``n_real`` excludes batch-dimension padding lanes (repeats of the
+        last program) from the step counters; note the per-lane step counts
+        are the *semantic* early-exit points — a lockstep batch's device
+        work is governed by its slowest live lane."""
+        n_real = len(progs) if n_real is None else n_real
+        if self.solver == "dense":
+            solved = solve_relaxation_batch(progs, n_iters=self.n_iters)
+            self.stats.solver_steps += self.n_iters * n_real
+            self.stats.solver_step_budget += self.n_iters * n_real
+            return solved
+        solved3 = solve_relaxation_sparse_batch(
+            progs,
+            n_iters=self.n_iters,
+            early_exit=self.early_exit,
+            span_rtol=self.span_rtol,
+            stable_chunks=self.stable_chunks,
+            backend="pallas" if self.solver.startswith("pallas") else "jnp",
+            interpret=self.solver == "pallas-interpret",
+        )
+        self.stats.solver_steps += sum(s for _, _, s in solved3[:n_real])
+        self.stats.solver_step_budget += self.n_iters * n_real
+        return [(m, relaxed) for m, relaxed, _ in solved3]
+
     def solve(
         self,
         net: NetworkGraph,
@@ -510,9 +1002,14 @@ class JRBAEngine:
         prog = self.build(net, flows, capacity=capacity)
         if prog is None:
             return None
-        self._note_shape(("single", prog.usage.shape, self.n_iters))
+        if self._use_fast_path(prog, refine):
+            t0 = time.perf_counter()
+            res = self._fast_single(prog, water_filling)
+            self.stats.solve_seconds += time.perf_counter() - t0
+            return res
+        self._note_shape(("single", self._shape_key(prog), self.n_iters))
         t0 = time.perf_counter()
-        m, relaxed = solve_relaxation(prog, n_iters=self.n_iters)
+        m, relaxed = self._relax_one(prog)
         self.stats.solve_seconds += time.perf_counter() - t0
         self.stats.single_solves += 1
         return _finalize(prog, m, relaxed, water_filling=water_filling, refine=refine)
@@ -567,8 +1064,14 @@ class JRBAEngine:
         results: list[JRBAResult | None] = [None] * n
         by_bucket: dict[tuple, list[int]] = {}
         for i, p in enumerate(progs):
-            if p is not None:
-                by_bucket.setdefault(p.usage.shape, []).append(i)
+            if p is None:
+                continue
+            if self._use_fast_path(p, refine):
+                t0 = time.perf_counter()
+                results[i] = self._fast_single(p, wf[i])
+                self.stats.solve_seconds += time.perf_counter() - t0
+            else:
+                by_bucket.setdefault(self._shape_key(p), []).append(i)
         for shape, idxs in by_bucket.items():
             group = [progs[i] for i in idxs]
             b_pad = 1
@@ -580,7 +1083,7 @@ class JRBAEngine:
             self._note_shape(("batch", b_pad, shape, self.n_iters))
             padded = group + [group[-1]] * (b_pad - len(group))
             t0 = time.perf_counter()
-            solved = solve_relaxation_batch(padded, n_iters=self.n_iters)[: len(group)]
+            solved = self._relax_group(padded, n_real=len(group))[: len(group)]
             self.stats.solve_seconds += time.perf_counter() - t0
             self.stats.batched_solves += 1
             self.stats.batched_instances += len(group)
@@ -600,11 +1103,12 @@ def jrba_batch(
     n_iters: int = 400,
     water_filling: bool = False,
     refine: bool = True,
+    solver: str = "auto",
 ) -> list[JRBAResult | None]:
     """Batched Algorithm 2 over N independent instances (one-shot convenience
     around :class:`JRBAEngine`; reuse an engine across calls to keep its
     compilation cache warm)."""
-    eng = JRBAEngine(k=k, n_iters=n_iters)
+    eng = JRBAEngine(k=k, n_iters=n_iters, solver=solver)
     return eng.solve_many(
         net,
         flow_sets,

@@ -205,6 +205,7 @@ class OnlineScheduler:
         max_acceptable_span: float = 1e4,
         engine: JRBAEngine | None = None,
         speculate: bool = True,
+        solver: str = "auto",
     ) -> None:
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
@@ -220,9 +221,10 @@ class OnlineScheduler:
         self.speculate = speculate
         # shared engines keep compiled shape buckets + path caches warm across
         # schedulers (a fleet of simulations pays compile cost once); a passed
-        # engine is authoritative, so k_paths/jrba_iters re-derive from it
-        # rather than silently diverging
-        self.engine = engine or JRBAEngine(k=k_paths, n_iters=jrba_iters)
+        # engine is authoritative, so k_paths/jrba_iters (and the solver
+        # formulation — `solver` only applies when the engine is built here)
+        # re-derive from it rather than silently diverging
+        self.engine = engine or JRBAEngine(k=k_paths, n_iters=jrba_iters, solver=solver)
         self.k_paths = self.engine.k
         self.jrba_iters = self.engine.n_iters
 

@@ -10,9 +10,17 @@ from __future__ import annotations
 
 import heapq
 
+import numpy as np
+
 from .graph import NetworkGraph
 
-__all__ = ["dijkstra", "k_shortest_paths", "path_links", "avg_path_bandwidth"]
+__all__ = [
+    "dijkstra",
+    "k_shortest_paths",
+    "path_link_index",
+    "path_links",
+    "avg_path_bandwidth",
+]
 
 
 def _edge_cost(net: NetworkGraph, u: int, v: int, eps: float = 1e-3) -> float:
@@ -104,6 +112,37 @@ def k_shortest_paths(net: NetworkGraph, src: int, dst: int, k: int) -> list[list
 def path_links(net: NetworkGraph, path: list[int]) -> list[int]:
     """Node path -> link-id list (empty for colocated src==dst)."""
     return [net.link_id(path[i], path[i + 1]) for i in range(len(path) - 1)]
+
+
+def path_link_index(
+    net: NetworkGraph,
+    all_paths: list[list[list[int]]],
+    *,
+    k: int,
+    rows: int,
+    pmax: int | None = None,
+) -> np.ndarray:
+    """Padded path->link index tensor ``(rows, k, pmax)``: entry ``[i, kk, p]``
+    is the link id of hop ``p`` of candidate path ``kk`` of flow ``i``. Unused
+    slots (short paths, missing candidates, shape-padding rows) hold the
+    sentinel ``L = len(net.links)`` — a dummy scatter bin the sparse JRBA
+    solver drops, so no separate mask tensor is needed. ``pmax`` defaults to
+    the longest candidate path rounded up to a power of two (>= 4), keeping
+    the jitted solver on O(log) distinct hop-count shapes."""
+    L = len(net.links)
+    longest = max((len(p) - 1 for ps in all_paths for p in ps[:k]), default=1)
+    if pmax is None:
+        pmax = 4
+        while pmax < longest:
+            pmax *= 2
+    elif pmax < longest:
+        raise ValueError(f"pmax={pmax} < longest candidate path ({longest} links)")
+    idx = np.full((rows, k, pmax), L, dtype=np.int32)
+    for i, ps in enumerate(all_paths):
+        for kk, path in enumerate(ps[:k]):
+            ls = path_links(net, path)
+            idx[i, kk, : len(ls)] = ls
+    return idx
 
 
 def avg_path_bandwidth(net: NetworkGraph, src: int, dst: int) -> float:

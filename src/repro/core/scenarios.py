@@ -276,6 +276,15 @@ SCENARIOS: dict[str, Scenario] = {
             _bursty(),
         ),
         Scenario(
+            "wan-mesh-xl",
+            "Oakestra-scale Waxman WAN (64 sites, ~300 links): the large-L "
+            "regime where the dense JRBA formulation pays for every link on "
+            "every solver step and the sparse active-link compression wins "
+            "by an order of magnitude",
+            lambda rng: wan_mesh(64, rng=rng),
+            _bursty(),
+        ),
+        Scenario(
             "fat-tree",
             "k=4 data-center fabric, compute at hosts only",
             lambda rng: fat_tree(4),

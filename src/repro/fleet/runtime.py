@@ -146,6 +146,7 @@ class FleetRuntime:
         # the engine was warmed by earlier runs (the benchmark's
         # warm-then-measure pattern)
         hits0, misses0 = engine.stats.cache_hits, engine.stats.cache_misses
+        solver0 = dataclasses.asdict(engine.stats)
         t_start = time.perf_counter()
         lanes = [
             _Lane(sim=s, gen=s.scheduler.step(s.arrivals, max_time=s.max_time))
@@ -204,8 +205,24 @@ class FleetRuntime:
             round_idx += 1
         wall = time.perf_counter() - t_start
         results = [ln.result for ln in lanes]
+        stats1 = dataclasses.asdict(engine.stats)
         telemetry.finalize(
-            names=[s.name for s in sims], results=results, wall_seconds=wall
+            names=[s.name for s in sims],
+            results=results,
+            wall_seconds=wall,
+            solver={
+                "mode": engine.solver,
+                **{
+                    key: stats1[key] - solver0[key]
+                    for key in (
+                        "solver_steps",
+                        "solver_step_budget",
+                        "fast_path_solves",
+                        "prog_cache_hits",
+                        "prog_cache_misses",
+                    )
+                },
+            },
         )
         return FleetResult(results=results, telemetry=telemetry, wall_seconds=wall)
 

@@ -66,6 +66,7 @@ class FleetTelemetry:
         names: list[str],
         results: "list[SimResult]",
         wall_seconds: float,
+        solver: dict | None = None,
     ) -> dict:
         """Aggregate per-scenario throughput and fleet-level rates. ``names``
         groups simulations (several fleet lanes may share one scenario name)."""
@@ -101,6 +102,11 @@ class FleetTelemetry:
                     else None
                 ),
             },
+            # solver-formulation telemetry for THIS run (mode, relaxation
+            # steps actually run vs the fixed dense budget, analytic
+            # single-flow fast paths, program-tensor cache traffic) — see
+            # EngineStats; None when the runtime didn't supply it
+            "solver": solver,
             "scenarios": {
                 name: {
                     "sims": len(group),

@@ -1,3 +1,10 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas kernel layer. Two kinds of kernels live here:
+#   * model-substrate kernels (flash_attention / ssd / rwkv6 via ops.py +
+#     ref.py oracles) used by the ML workloads the scheduler places;
+#   * scheduler-core kernels: jrba_congestion fuses the sparse JRBA
+#     relaxation's per-step pipeline (load scatter, smoothed congestion,
+#     gradient gather, Adam) for the hot solver loop in core/jrba.py, which
+#     lazy-imports it so minimal environments never pay the import unless
+#     the pallas solver mode is selected.
+# All kernels are validated on CPU CI in interpret mode; compiled paths
+# target TPU.

@@ -117,12 +117,15 @@ def test_solve_many_across_networks():
     ]
     assert len({len(n.links) for n in nets}) == 1  # same L -> same shape bucket
     sets = [random_flow_sets(n, 1, 5, seed=10 + i)[0] for i, n in enumerate(nets)]
-    eng = JRBAEngine(k=3, n_iters=200)
+    # dense mode pins the (Nf, K, L) bucketing contract; the sparse solver
+    # buckets on compressed active-link shapes instead (covered in
+    # test_solver_sparse.py, where even different-L nets may share a bucket)
+    eng = JRBAEngine(k=3, n_iters=200, solver="dense")
     batched = eng.solve_many(nets, sets)
     assert eng.stats.batched_solves == 1  # one vmapped call for all four nets
     assert eng.stats.batched_instances == 4
     for net, fs, got in zip(nets, sets, batched):
-        ref = JRBAEngine(k=3, n_iters=200).solve(net, fs)
+        ref = JRBAEngine(k=3, n_iters=200, solver="dense").solve(net, fs)
         assert got.span == pytest.approx(ref.span, rel=0.01)
         # routes must be valid on *this* instance's topology
         for route in got.routes:

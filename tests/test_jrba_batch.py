@@ -60,7 +60,10 @@ def test_batch_handles_mixed_sizes_and_empty_instances():
     net = NETS["edge-mesh"]()
     sets = _flow_sets(net, 2, 3) + [[]] + _flow_sets(net, 2, 10, seed=7)
     sets.append([Flow(2, 2, 5.0)])  # colocated-only instance
-    eng = JRBAEngine(k=3, n_iters=150)
+    # dense mode pins the historical bucketing contract (sparse adds
+    # pmax/active-link dimensions to the bucket key — covered in
+    # test_solver_sparse.py)
+    eng = JRBAEngine(k=3, n_iters=150, solver="dense")
     out = eng.solve_many(net, sets)
     assert out[2] is None and out[-1] is None
     for i in (0, 1, 3, 4):
