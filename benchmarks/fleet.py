@@ -30,6 +30,12 @@ Five sections:
     where the dense formulation pays per-link per-step), early-exit step
     counts, iters/s, and the scheduler-equivalence record deviation (which
     must be exactly zero — the sparse solver must reproduce dense rounding).
+  * ``churn`` — the dynamic-network acceptance on ``wan-mesh-churn``
+    (capacity drift + link/node failures + MMPP dips): dense and sparse
+    engines drive OTFS through identical churn traces; every job must
+    finish across failure/recovery cycles, the churn machinery must actually
+    fire (re-solves, re-routes, stalls), and the records must match
+    bit-for-bit (record deviation exactly zero).
 
 ``--smoke`` shrinks everything to a few events so CI can catch harness bitrot
 without measuring timings.
@@ -484,6 +490,78 @@ def bench_round_batch(
     return rows
 
 
+def bench_churn(
+    *,
+    smoke: bool,
+    scenario: str = "wan-mesh-churn",
+    n_jobs: int = 10,
+    seeds: int = 2,
+) -> dict:
+    """Dynamic-network acceptance: OTFS under churn, dense vs sparse.
+
+    Both engines replay the identical (topology, arrivals, churn trace)
+    tuple per seed; the trace heals the network by construction, so every
+    job must eventually finish, and the two formulations must produce
+    bit-identical scheduler records (the start-portfolio rounding makes this
+    hold even on the degenerate symmetric programs churn re-solves create)."""
+    n_iters = 60 if smoke else 150
+    if smoke:
+        n_jobs, seeds = 4, 1
+    k = 3
+    sc = SCENARIOS[scenario]
+
+    def run_side(solver: str):
+        engine = JRBAEngine(k=k, n_iters=n_iters, solver=solver)
+        out, churn_len = [], 0
+        t0 = time.perf_counter()
+        for seed in range(seeds):
+            net, arrivals, churn = sc.build_churn(seed=seed, n_jobs=n_jobs)
+            churn_len += len(churn)
+            sched = OnlineScheduler(
+                net, "OTFS", k_paths=k, jrba_iters=n_iters, engine=engine
+            )
+            out.append(sched.run(arrivals, network_events=churn))
+        return out, time.perf_counter() - t0, churn_len
+
+    dense_res, t_dense, n_steps = run_side("dense")
+    sparse_res, t_sparse, _ = run_side("sparse")
+
+    for a, b in zip(dense_res, sparse_res):
+        assert a.n_scheduled == b.n_scheduled, "sparse changed admissions under churn"
+    unfinished = sum(r.unfinished for r in dense_res) + sum(
+        r.unfinished for r in sparse_res
+    )
+    assert unfinished == 0, f"{unfinished} jobs never finished across churn cycles"
+    max_dev = max_record_dev(dense_res, sparse_res)
+
+    def agg(results, field):
+        return sum(getattr(r, field) for r in results)
+
+    assert agg(dense_res, "churn_events") == agg(sparse_res, "churn_events")
+    out = {
+        "scenario": scenario,
+        "n_jobs": n_jobs,
+        "seeds": seeds,
+        "n_iters": n_iters,
+        "trace_steps": n_steps,
+        "max_record_rel_dev": max_dev,
+        "unfinished": unfinished,
+        "churn_events": agg(dense_res, "churn_events"),
+        "churn_resolves": agg(dense_res, "churn_resolves"),
+        "churn_reroutes": agg(dense_res, "churn_reroutes"),
+        "churn_stalls": agg(dense_res, "churn_stalls"),
+        "dense_seconds": t_dense,
+        "sparse_seconds": t_sparse,
+    }
+    print(
+        f"churn[{scenario} {n_jobs}x{seeds} jobs] dev={max_dev:.2e} "
+        f"events={out['churn_events']} resolves={out['churn_resolves']} "
+        f"reroutes={out['churn_reroutes']} stalls={out['churn_stalls']} "
+        f"unfinished={unfinished}"
+    )
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="tiny run, no timing claims")
@@ -501,6 +579,7 @@ def main() -> None:
         "cosched": bench_cosched(smoke=args.smoke, trace_path=trace_path),
         "round_batch": bench_round_batch(smoke=args.smoke),
         "solver": bench_solver(smoke=args.smoke),
+        "churn": bench_churn(smoke=args.smoke),
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
@@ -558,6 +637,13 @@ def main() -> None:
             f"sparse solve-stage speedup {xl['speedup_solve_stage']:.2f}x < 3x "
             "on the large-L Waxman WAN"
         )
+        churn = report["churn"]
+        assert churn["max_record_rel_dev"] == 0.0, (
+            f"dense and sparse scheduler records diverged under churn "
+            f"({churn['max_record_rel_dev']:.3e})"
+        )
+        for counter in ("churn_events", "churn_resolves", "churn_reroutes"):
+            assert churn[counter] > 0, f"churn bench never exercised {counter}"
 
 
 if __name__ == "__main__":

@@ -7,11 +7,12 @@ write-only artifacts.
 Two kinds of checks:
 
   * **Correctness caps** (always, including ``--smoke`` reports): the batch
-    and cosched span deviations stay within 1%, and the round_batch and
-    solver record deviations stay exactly zero — speculative OTFS must
+    and cosched span deviations stay within 1%, and the round_batch, solver
+    and churn record deviations stay exactly zero — speculative OTFS must
     reproduce sequential admissions bit-for-bit, and the sparse congestion
-    solver must reproduce dense-reference scheduler records bit-for-bit,
-    at any scale.
+    solver must reproduce dense-reference scheduler records bit-for-bit
+    (including under network churn, where every job must also finish across
+    failure/recovery cycles), at any scale.
   * **Regression ratios** (only when BOTH reports are non-smoke, since smoke
     timings are meaningless): every tracked machine-relative metric —
     batch/cosched/round_batch speedups, batch occupancy, dispatch collapse,
@@ -61,7 +62,9 @@ def _ratio_metrics(report: dict, *, absolute: bool = False) -> dict[str, float]:
     # topologies the solver is dispatch-bound (its ~1x ratio swings with
     # host load), and even the compute-dominated wan-mesh-xl ratio moves
     # ~±30% run to run — the acceptance floor is enforced as an absolute
-    # cap in _check_caps instead
+    # cap in _check_caps instead. The churn section carries no timing
+    # ratios either: its metrics are deterministic counters, capped
+    # absolutely (record dev == 0, unfinished == 0, counters > 0) below.
     return out
 
 
@@ -102,10 +105,29 @@ def _check_caps(report: dict, label: str) -> list[str]:
                 f"{label}: solver[wan-mesh-xl].speedup_solve_stage "
                 f"{speedup:.2f}x < 3x acceptance floor"
             )
+    churn = report.get("churn", {})
+    dev = churn.get("max_record_rel_dev")
+    if dev is not None and dev != 0.0:
+        failures.append(
+            f"{label}: churn.max_record_rel_dev {dev:.3e} != 0 "
+            "(dense and sparse solvers diverged under network churn)"
+        )
+    unfinished = churn.get("unfinished")
+    if unfinished is not None and unfinished != 0:
+        failures.append(
+            f"{label}: churn.unfinished == {unfinished} "
+            "(jobs never finished across failure/recovery cycles)"
+        )
+    if not report.get("smoke") and churn:
+        for counter in ("churn_events", "churn_resolves", "churn_reroutes"):
+            if churn.get(counter) == 0:
+                failures.append(
+                    f"{label}: churn.{counter} == 0 (churn machinery never fired)"
+                )
     return failures
 
 
-REQUIRED_SECTIONS = ("scenarios", "batch", "cosched", "round_batch", "solver")
+REQUIRED_SECTIONS = ("scenarios", "batch", "cosched", "round_batch", "solver", "churn")
 
 
 def compare(

@@ -16,6 +16,7 @@ from .paths import avg_path_bandwidth, dijkstra, path_links
 
 __all__ = [
     "Allocation",
+    "COLOCATED_BANDWIDTH",
     "allocate_greedy",
     "allocate_whole_job_lr",
     "allocate_whole_job_br",
@@ -66,8 +67,12 @@ def allocate_greedy(
     for i in order:
         task = job.tasks[i]
         if task.pinned_node is not None:
+            # pinned tasks (data sources — cameras streaming from their own
+            # hardware) don't draw from the schedulable memory pool: the
+            # online finish handler deliberately skips them when crediting
+            # memory back, so debiting here would leak memory on every
+            # pinned job (admission debit must equal finish credit)
             assignment[i] = task.pinned_node
-            mem[task.pinned_node] = max(0.0, mem[task.pinned_node] - task.mem)
             continue
         best_j, best_t = -1, float("inf")
         for j in range(net.n_nodes):
@@ -149,13 +154,22 @@ def allocate_whole_job_br(
 # ---------------------------------------------------------------------------
 # TP baseline routing/bandwidth: shortest path + per-link equal share
 # ---------------------------------------------------------------------------
+# Finite bandwidth sentinel for flows whose route crosses zero links
+# (co-located src == dst): the transfer is node-local and effectively free,
+# but an infinite bandwidth would leak into JobRecord.bandwidths and break
+# strict-JSON telemetry; any volume divided by this contributes ~0 to a span
+COLOCATED_BANDWIDTH = float(np.finfo(np.float64).max)
+
+
 def equal_share_bandwidth(
     net: NetworkGraph, flows: list[Flow], *, capacity: np.ndarray | None = None
 ) -> tuple[list[list[int]], np.ndarray]:
     """Default policy (baseline TP, and ENTS Fig. 2(d)): every flow takes the
     shortest route; flows crossing a link share its capacity equally.
 
-    Returns (routes as node-paths, per-flow bandwidth b_i).
+    Returns (routes as node-paths, per-flow bandwidth b_i). Co-located flows
+    (src == dst — a zero-link route) get the finite ``COLOCATED_BANDWIDTH``
+    sentinel rather than ``inf``.
     """
     capacity = net.capacity if capacity is None else capacity
     routes: list[list[int]] = []
@@ -174,7 +188,7 @@ def equal_share_bandwidth(
             bands[i] = 0.0
             continue
         shares = [capacity[l] / link_users[l] for l in path_links(net, path)]
-        bands[i] = min(shares) if shares else float("inf")
+        bands[i] = min(shares) if shares else COLOCATED_BANDWIDTH
     return routes, bands
 
 

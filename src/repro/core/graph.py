@@ -121,6 +121,16 @@ class NetworkGraph:
     Node attributes: ``power`` (PS_j), ``mem_max``/``mem_avail`` (R^j).
     Link attribute: ``bandwidth`` (B_l); residual tracked separately so the
     online scheduler can allocate/release.
+
+    The link *set* is fixed at construction (``links``/``link_index`` and the
+    length of ``capacity`` never change — every tensor program and cache in
+    the repo is shaped by L), but the network is otherwise mutable: the churn
+    API below drifts per-link capacity and fails/recovers links and nodes in
+    place. Failures keep the link's array slot (capacity 0, ``link_alive``
+    False) and only remove it from the adjacency, so routing stops seeing it
+    while solver shapes stay stable. ``topology_version`` bumps on any
+    adjacency change — caches of candidate paths (the engine's per-net path
+    and program caches) are only valid within one topology epoch.
     """
 
     def __init__(
@@ -149,6 +159,13 @@ class NetworkGraph:
         self.link_index = {l: i for i, l in enumerate(self.links)}
         self.capacity = np.array([self.bandwidth[l] for l in self.links])
         self.residual = self.capacity.copy()
+        # churn state: construction-time capacities (the drift anchor and the
+        # restore_topology target), per-link liveness, and the capacity each
+        # dead link held at failure (what recovery restores by default)
+        self.base_capacity = self.capacity.copy()
+        self.link_alive = np.ones(len(self.links), dtype=bool)
+        self.topology_version = 0
+        self._failed_capacity: dict[int, float] = {}
 
     # -- helpers -----------------------------------------------------------
     def neighbors(self, u: int) -> set[int]:
@@ -166,6 +183,110 @@ class NetworkGraph:
 
     def restore_state(self, state: tuple[np.ndarray, np.ndarray]) -> None:
         self.residual, self.mem_avail = state[0].copy(), state[1].copy()
+
+    # -- churn: capacity drift + link/node failure & recovery ----------------
+    def _drop_host_caches(self) -> None:
+        """Any capacity or topology change invalidates host-side memos keyed
+        on static network state (currently the avg-path-bandwidth cache used
+        by Algorithm 1)."""
+        cache = getattr(self, "_avg_bw_cache", None)
+        if cache:
+            cache.clear()
+
+    def set_link_capacity(self, u: int, v: int, bw: float) -> None:
+        """Drift one link's live capacity in place (the link set and L are
+        unchanged, so compiled solver shapes and program tensors stay valid —
+        only the capacity vector moves). Setting capacity on a dead link
+        updates the value recovery will restore instead."""
+        if bw < 0:
+            raise ValueError("negative link capacity")
+        key = (min(u, v), max(u, v))
+        l = self.link_index[key]
+        if not self.link_alive[l]:
+            self._failed_capacity[l] = float(bw)
+            return
+        self.bandwidth[key] = float(bw)
+        self.capacity[l] = bw
+        self._drop_host_caches()
+
+    def fail_link(self, u: int, v: int) -> bool:
+        """Take a link down: remove it from the adjacency (routing stops
+        seeing it) and zero its capacity, keeping its array slot so L-shaped
+        tensors stay valid. Returns False if the link was already dead."""
+        key = (min(u, v), max(u, v))
+        l = self.link_index[key]
+        if not self.link_alive[l]:
+            return False
+        self._failed_capacity[l] = float(self.capacity[l])
+        self.link_alive[l] = False
+        self.capacity[l] = 0.0
+        self.bandwidth[key] = 0.0
+        self._adj[u].discard(v)
+        self._adj[v].discard(u)
+        self.topology_version += 1
+        self._drop_host_caches()
+        return True
+
+    def recover_link(self, u: int, v: int, capacity: float | None = None) -> bool:
+        """Bring a dead link back at ``capacity`` (default: its capacity at
+        failure, as later drifted by :meth:`set_link_capacity`). Returns
+        False if the link was already alive."""
+        key = (min(u, v), max(u, v))
+        l = self.link_index[key]
+        if self.link_alive[l]:
+            return False
+        bw = self._failed_capacity.pop(l) if capacity is None else float(capacity)
+        self.link_alive[l] = True
+        self.capacity[l] = bw
+        self.bandwidth[key] = bw
+        self._adj[u].add(v)
+        self._adj[v].add(u)
+        self.topology_version += 1
+        self._drop_host_caches()
+        return True
+
+    def fail_node(self, node: int) -> list[int]:
+        """Take a node down by failing every live incident link (the node
+        becomes unreachable; its memory bookkeeping is untouched — jobs
+        pinned or already placed there simply stall until recovery).
+        Returns the failed link ids."""
+        failed = []
+        for peer in sorted(self._adj[node].copy()):
+            if self.fail_link(node, peer):
+                failed.append(self.link_id(node, peer))
+        return failed
+
+    def recover_node(self, node: int) -> list[int]:
+        """Revive every dead link incident to ``node`` (the node's ports come
+        back; a link whose far end is itself down stays down only if that
+        end's links were failed separately — link state is tracked per link).
+        Returns the recovered link ids."""
+        recovered = []
+        for l, (u, v) in enumerate(self.links):
+            if node in (u, v) and not self.link_alive[l]:
+                self.recover_link(u, v)
+                recovered.append(l)
+        return recovered
+
+    def restore_topology(self) -> None:
+        """Undo all churn: revive every dead link and reset capacities to
+        their construction-time values. Used to make re-runs on a mutated
+        network reproducible (``OnlineScheduler.step`` calls this when given
+        a churn trace, mirroring ``reset_residual``). Always bumps
+        ``topology_version``: candidate-path enumeration tie-breaks on live
+        bandwidth, so caches built while capacities were drifted are not the
+        pristine-network caches even when every link is already alive."""
+        for l, (u, v) in enumerate(self.links):
+            if not self.link_alive[l]:
+                self._adj[u].add(v)
+                self._adj[v].add(u)
+        self.topology_version += 1
+        self.link_alive[:] = True
+        self._failed_capacity.clear()
+        self.capacity = self.base_capacity.copy()
+        for l, key in enumerate(self.links):
+            self.bandwidth[key] = float(self.capacity[l])
+        self._drop_host_caches()
 
 
 def random_edge_network(

@@ -16,6 +16,14 @@ The simulator is host-side Python (it is a control plane); the JRBA inner
 solve is the jitted JAX program in ``core/jrba.py``. Scheduling-algorithm
 wall-clock is measured and reported (``SimResult.sched_overhead``) — the
 paper's waiting-time experiments attribute queue delay to exactly this.
+
+Besides arrivals and completions the event loop understands a third event
+kind, ``"network"``: a churn step (``core.scenarios.ChurnStep``) that drifts
+link capacities and fails/recovers links or nodes mid-simulation. The
+handler invalidates candidate-path caches and speculations, re-routes and
+re-solves the running jobs the step touched (OTFS: per-job on residual;
+OTFA: the usual all-flows refresh; LR/BR/TP: equal-share recompute), and
+runs a scheduling round so recoveries re-admit queued jobs.
 """
 from __future__ import annotations
 
@@ -23,7 +31,7 @@ import dataclasses
 import heapq
 import math
 import time
-from typing import Generator
+from typing import Generator, Sequence
 
 import numpy as np
 
@@ -38,6 +46,7 @@ from .allocation import (
 from .graph import Flow, JobGraph, NetworkGraph
 from .jrba import JRBAEngine, JRBAResult, link_load_fits
 from .paths import path_links
+from .scenarios import ChurnStep, apply_churn_step
 
 __all__ = [
     "JobRecord",
@@ -89,7 +98,7 @@ class SimResult:
     records: list[JobRecord]
     sched_overhead: float  # total wall-clock spent inside scheduling calls
     unfinished: int
-    n_events: int = 0  # simulator events processed (arrivals + completions)
+    n_events: int = 0  # simulator events processed (arrivals + completions + churn)
     # stepper-protocol traffic: a dispatch is one RoundRequest yielded to the
     # driver; a solve is one JRBA program inside it. Sequential OTFS has
     # n_dispatches == n_solves; speculative intra-round batching collapses
@@ -99,6 +108,14 @@ class SimResult:
     spec_rounds: int = 0  # scheduling rounds where speculation was consulted
     spec_accepted: int = 0  # speculative solutions reused verbatim
     spec_repaired: int = 0  # speculative solutions discarded and re-solved
+    # network-churn traffic: "network" events applied, running OTFS jobs
+    # re-solved because a churn step touched their footprint, re-solves whose
+    # route set actually changed, and re-solves that left the job stalled
+    # (unroutable until a later recovery step)
+    churn_events: int = 0
+    churn_resolves: int = 0
+    churn_reroutes: int = 0
+    churn_stalls: int = 0
 
     @property
     def spec_accept_rate(self) -> float:
@@ -242,13 +259,14 @@ class OnlineScheduler:
         arrivals: list[tuple[float, JobGraph, float]],  # (time, job, total_units)
         *,
         max_time: float = 1e6,
+        network_events: Sequence[ChurnStep] | None = None,
     ) -> SimResult:
         """Drive :meth:`step` to completion, answering every
         :class:`RoundRequest` inline through the scheduler's own engine.
         Singleton rounds go through the scalar ``solve`` path — byte-for-byte
         the pre-stepper behaviour — while speculative multi-solve rounds go
         through one ``solve_many`` dispatch (the intra-round batching win)."""
-        stepper = self.step(arrivals, max_time=max_time)
+        stepper = self.step(arrivals, max_time=max_time, network_events=network_events)
         try:
             req = next(stepper)
             while True:
@@ -279,6 +297,7 @@ class OnlineScheduler:
         arrivals: list[tuple[float, JobGraph, float]],  # (time, job, total_units)
         *,
         max_time: float = 1e6,
+        network_events: Sequence[ChurnStep] | None = None,
     ) -> Generator[RoundRequest, RoundReply, SimResult]:
         """Resumable event loop: a generator that yields a
         :class:`RoundRequest` at every point the simulation needs JRBA
@@ -286,8 +305,19 @@ class OnlineScheduler:
         back via ``send``. Returns the :class:`SimResult` as the generator's
         value (``StopIteration.value``). This is the unit the fleet runtime
         co-schedules: N steppers advanced in lockstep flatten their rounds'
-        solves through one compiled call."""
+        solves through one compiled call.
+
+        ``network_events`` is a churn trace (see ``core.scenarios``): each
+        :class:`ChurnStep` becomes a third event kind ``"network"`` that
+        mutates the network in place, invalidates candidate-path caches and
+        speculations, re-routes + re-solves affected running jobs, and runs
+        a scheduling round (recoveries re-admit jobs the degraded network
+        rejected). The topology is restored to its construction state first,
+        so re-running the same (net, trace) pair is reproducible."""
         net = self.net
+        churn_steps = list(network_events or [])
+        if churn_steps:
+            net.restore_topology()
         net.reset_residual()
         records = [
             JobRecord(i, job, t, units, remaining_units=units)
@@ -295,14 +325,18 @@ class OnlineScheduler:
         ]
         q_wait: list[JobRecord] = []
         q_run: list[JobRecord] = []
-        events: list[tuple[float, int, str, int]] = []  # (time, seq, kind, job_id)
+        events: list[tuple[float, int, str, int]] = []  # (time, seq, kind, job/step id)
         seq = 0
         for r in records:
             heapq.heappush(events, (r.submit_time, seq, "arrive", r.job_id))
             seq += 1
+        for i, cs in enumerate(churn_steps):
+            heapq.heappush(events, (cs.time, seq, "network", i))
+            seq += 1
         sched_overhead = 0.0
         n_dispatches = n_solves = 0
         spec_rounds = spec_accepted = spec_repaired = 0
+        churn_events = churn_resolves = churn_reroutes = churn_stalls = 0
 
         def solve_round(reqs: list[SolveRequest]):
             """Sub-generator wrapping every driver suspension: yields one
@@ -324,19 +358,64 @@ class OnlineScheduler:
         def set_finish_event(r: JobRecord, now: float) -> None:
             nonlocal seq
             if r.span <= 0 or not np.isfinite(r.span):
+                # no progress is possible at this span: any already-queued
+                # finish event is stale, so finish_time must stop matching it
+                # (a churn outage would otherwise let the pre-outage event
+                # fire and complete the job at full speed)
+                r.finish_time = float("inf")
                 return
             r.finish_time = now + max(r.remaining_units, 0.0) * r.span
             heapq.heappush(events, (r.finish_time, seq, "finish", r.job_id))
             seq += 1
 
-        def rebuild_residual_from_running() -> None:
+        def rebuild_residual_from_running(
+            exclude: list[JobRecord] | None = None,
+        ) -> None:
             net.residual = net.capacity.copy()
             for r in q_run:
-                if r.bandwidths is None:
+                if r.bandwidths is None or (exclude is not None and r in exclude):
                     continue
                 for route, b in zip(r.routes, r.bandwidths):
                     for l in path_links(net, route):
                         net.residual[l] = max(net.residual[l] - b, 0.0)
+
+        def churn_reroute(affected: list[JobRecord], now: float):
+            """OTFS response to a churn step: rebuild the residual from the
+            unaffected running jobs' committed loads on the NEW capacities,
+            then re-solve each affected job on that residual in admission
+            order (earliest ``schedule_time`` first — deterministic, and the
+            job that has held its allocation longest keeps first claim). A
+            re-solve re-routes over fresh candidate paths (the engine's path
+            cache was invalidated if the topology changed) and re-commits the
+            new link load; a job whose flows can no longer be usefully routed
+            — endpoints partitioned by failures, or only a degenerate near-
+            zero-bandwidth route left on an exhausted residual — stalls with
+            zero bandwidth and an infinite span, holding its memory but no
+            links, until a later recovery or finish event re-solves it."""
+            nonlocal churn_resolves, churn_reroutes, churn_stalls
+            rebuild_residual_from_running(exclude=affected)
+            for r in sorted(affected, key=lambda j: (j.schedule_time, j.job_id)):
+                (res,) = yield from solve_round(
+                    [SolveRequest(net, r.flows, net.residual.copy(), self.water_fill)]
+                )
+                churn_resolves += 1
+                old_routes = r.routes
+                span = job_span(net, r.alloc, r.flows, res.bandwidth)
+                if np.isfinite(span) and span <= self.max_acceptable_span:
+                    r.bandwidths, r.routes, r.span = res.bandwidth, res.routes, span
+                    if r.routes != old_routes:
+                        churn_reroutes += 1
+                    net.residual = np.maximum(net.residual - res.link_load, 0.0)
+                    set_finish_event(r, now)
+                else:
+                    # same acceptability bar as admission: committing a
+                    # degenerate span would pin near-zero progress (and its
+                    # link claim) past the simulation horizon
+                    churn_stalls += 1
+                    r.bandwidths = np.zeros(len(r.flows))
+                    r.routes = res.routes
+                    r.span = float("inf")
+                    set_finish_event(r, now)  # invalidates any queued event
 
         def refresh_equal_share(now: float) -> None:
             """LR/BR/TP: global equal-share refresh of all active flows."""
@@ -589,6 +668,56 @@ class OnlineScheduler:
             if now > max_time:
                 break
             n_events += 1
+            if kind == "network":
+                advance_running(now)
+                touched, topo_changed = apply_churn_step(net, churn_steps[jid])
+                churn_events += 1
+                if not topo_changed and not np.any(touched):
+                    continue  # every op was a no-op; nothing to refresh
+                if topo_changed:
+                    # candidate paths may route over dead links or miss
+                    # recovered ones — drop the engine's per-net path and
+                    # program-tensor caches (capacity drift alone keeps them:
+                    # the program-cache hit path refreshes only capacity)
+                    self.engine.invalidate_network(net)
+                # drop ALL speculations, not just footprint-touched ones: a
+                # speculation also records an Algorithm-1 allocation, and the
+                # allocator's avg-path-bandwidth view shifts under any
+                # capacity change — replaying a pre-churn allocation would
+                # diverge from what a fresh sequential round computes
+                spec_memo.clear()
+                if self.base == "OTFS":
+                    affected = []
+                    for r in q_run:
+                        if not r.flows:
+                            continue  # no network footprint — churn-immune
+                        # candidate footprint on the POST-mutation paths: a
+                        # failure not on any candidate path cannot change the
+                        # enumeration, and a recovery that matters shows up
+                        # in the fresh footprint. Checked last: the cheap
+                        # stalled/route checks short-circuit the (possibly
+                        # fresh) Yen enumeration for jobs that re-solve (and
+                        # re-enumerate) anyway
+                        if (
+                            not np.isfinite(r.span)
+                            or any(
+                                touched[l]
+                                for route in r.routes
+                                for l in path_links(net, route)
+                            )
+                            or bool(
+                                np.any(self.engine.candidate_links(net, r.flows) & touched)
+                            )
+                        ):
+                            affected.append(r)
+                    yield from churn_reroute(affected, now)
+                elif self.base == "OTFA":
+                    if q_run:
+                        yield from refresh_otfa(now)
+                else:  # LR/BR/TP re-route + re-share over the mutated net
+                    refresh_equal_share(now)
+                yield from schedule_round(now)
+                continue
             r = by_id[jid]
             if kind == "finish":
                 # relative tolerance: event times are O(now), so an absolute
@@ -602,7 +731,10 @@ class OnlineScheduler:
                 q_run.remove(r)
                 r.remaining_units = 0.0
                 r.done = True
-                # Algo 3/4 lines 1-5: release compute + bandwidth
+                # Algo 3/4 lines 1-5: release compute + bandwidth. Pinned
+                # tasks are skipped symmetrically with admission (the
+                # allocators never debit them), so a full simulation
+                # conserves mem_avail exactly (regression-tested)
                 for i, task in enumerate(r.job.tasks):
                     if task.pinned_node is None:
                         net.mem_avail[int(r.alloc.assignment[i])] += task.mem
@@ -611,7 +743,14 @@ class OnlineScheduler:
                 elif self.base == "OTFA":
                     yield from refresh_otfa(now)
                 else:  # OTFS
-                    rebuild_residual_from_running()
+                    stalled = [j for j in q_run if j.flows and not np.isfinite(j.span)]
+                    if stalled:
+                        # the freed bandwidth may un-stall a churn-starved
+                        # job (churn_reroute rebuilds the residual itself);
+                        # without churn no running job is ever stalled
+                        yield from churn_reroute(stalled, now)
+                    else:
+                        rebuild_residual_from_running()
             else:  # arrival
                 advance_running(now)
                 q_wait.append(r)
@@ -627,4 +766,8 @@ class OnlineScheduler:
             spec_rounds=spec_rounds,
             spec_accepted=spec_accepted,
             spec_repaired=spec_repaired,
+            churn_events=churn_events,
+            churn_resolves=churn_resolves,
+            churn_reroutes=churn_reroutes,
+            churn_stalls=churn_stalls,
         )

@@ -17,6 +17,13 @@ workflows) stress exactly the regimes a flat mesh never produces:
 Each registry entry pairs a topology factory with an arrival process (steady
 Poisson or Markov-modulated bursts) so benchmarks and tests can iterate
 ``SCENARIOS`` without per-scenario glue.
+
+The module also generates **churn traces** — timestamped network mutations
+(per-link capacity drift as a bounded random walk, link/node failure +
+recovery cycles, MMPP-correlated bandwidth dips) consumed by the online
+simulator's ``"network"`` event kind. Every failure op has its matching
+recovery op emitted (even past ``t_end``), so a trace always returns the
+network to a fully-connected state and stalled jobs can finish.
 """
 from __future__ import annotations
 
@@ -29,19 +36,239 @@ from .graph import Flow, JobGraph, NetworkGraph, random_edge_network
 from .workloads import poisson_arrivals, poisson_burst_arrivals
 
 __all__ = [
+    "ChurnOp",
+    "ChurnStep",
     "Scenario",
     "SCENARIOS",
+    "apply_churn_step",
+    "capacity_drift_trace",
+    "churn_trace",
     "compute_nodes",
     "fat_tree",
     "get_scenario",
     "heterogeneous_mesh",
     "hierarchical_edge_cloud",
+    "link_failure_trace",
+    "mmpp_dip_trace",
+    "node_failure_trace",
     "random_flow_sets",
     "scenario_names",
     "wan_mesh",
 ]
 
 Arrivals = list[tuple[float, JobGraph, float]]
+
+
+# ---------------------------------------------------------------------------
+# Churn traces: timestamped network mutations
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ChurnOp:
+    """One network mutation. ``kind`` is one of ``capacity`` (set a live
+    link's bandwidth), ``fail``/``recover`` (a link), or ``fail_node``/
+    ``recover_node`` (every link incident to a node)."""
+
+    kind: str
+    link: tuple[int, int] | None = None
+    node: int | None = None
+    capacity: float | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnStep:
+    """All mutations applied at one simulated instant (e.g. one drift tick
+    updates many links atomically, so the scheduler re-solves once)."""
+
+    time: float
+    ops: tuple[ChurnOp, ...]
+
+
+def apply_churn_step(net: NetworkGraph, step: ChurnStep) -> tuple[np.ndarray, bool]:
+    """Apply one step to ``net`` in place. Returns ``(touched, topo_changed)``:
+    a bool mask over link ids whose capacity or liveness actually changed,
+    and whether the adjacency (and with it every candidate-path cache)
+    changed. No-op ops (failing a dead link, drifting to the same value)
+    touch nothing."""
+    touched = np.zeros(len(net.links), dtype=bool)
+    topo_changed = False
+    for op in step.ops:
+        if op.kind == "capacity":
+            u, v = op.link
+            l = net.link_id(u, v)
+            old = float(net.capacity[l])
+            net.set_link_capacity(u, v, op.capacity)
+            if net.link_alive[l] and float(net.capacity[l]) != old:
+                touched[l] = True
+        elif op.kind == "fail":
+            u, v = op.link
+            if net.fail_link(u, v):
+                touched[net.link_id(u, v)] = True
+                topo_changed = True
+        elif op.kind == "recover":
+            u, v = op.link
+            if net.recover_link(u, v, capacity=op.capacity):
+                touched[net.link_id(u, v)] = True
+                topo_changed = True
+        elif op.kind == "fail_node":
+            ids = net.fail_node(op.node)
+            touched[ids] = True
+            topo_changed = topo_changed or bool(ids)
+        elif op.kind == "recover_node":
+            ids = net.recover_node(op.node)
+            touched[ids] = True
+            topo_changed = topo_changed or bool(ids)
+        else:
+            raise ValueError(f"unknown churn op kind {op.kind!r}")
+    return touched, topo_changed
+
+
+def capacity_drift_trace(
+    net: NetworkGraph,
+    rng: np.random.RandomState,
+    *,
+    t_end: float,
+    dt: float = 2.0,
+    sigma: float = 0.12,
+    lo: float = 0.35,
+    hi: float = 1.8,
+    frac: float = 0.3,
+) -> list[ChurnStep]:
+    """Per-link bounded multiplicative random walk around the base capacity.
+
+    Every ``dt`` seconds a random ``frac`` of links takes a log-normal step
+    (stddev ``sigma``) on its walk state, clipped into ``[lo, hi]`` times the
+    construction-time capacity — WAN bandwidth wanders but never collapses to
+    zero or runs away."""
+    walk = np.ones(len(net.links))
+    steps: list[ChurnStep] = []
+    t = dt
+    while t < t_end:
+        picked = np.flatnonzero(rng.uniform(size=len(net.links)) < frac)
+        ops = []
+        for l in picked:
+            walk[l] = float(np.clip(walk[l] * np.exp(sigma * rng.normal()), lo, hi))
+            ops.append(
+                ChurnOp(
+                    "capacity",
+                    link=net.links[l],
+                    capacity=float(net.base_capacity[l] * walk[l]),
+                )
+            )
+        if ops:
+            steps.append(ChurnStep(t, tuple(ops)))
+        t += dt
+    return steps
+
+
+def link_failure_trace(
+    net: NetworkGraph,
+    rng: np.random.RandomState,
+    *,
+    t_end: float,
+    n_links: int = 3,
+    mtbf: float = 25.0,
+    mttr: float = 5.0,
+) -> list[ChurnStep]:
+    """Exponential fail/recover cycles on ``n_links`` randomly sampled links.
+
+    Each sampled link alternates up (mean ``mtbf``) and down (mean ``mttr``)
+    phases; a failure whose up-phase starts before ``t_end`` always emits its
+    recovery too, so the trace never leaves the network degraded forever."""
+    chosen = rng.choice(len(net.links), size=min(n_links, len(net.links)), replace=False)
+    steps: list[ChurnStep] = []
+    for l in sorted(int(c) for c in chosen):
+        link = net.links[l]
+        t = rng.exponential(mtbf)
+        while t < t_end:
+            down = rng.exponential(mttr)
+            steps.append(ChurnStep(t, (ChurnOp("fail", link=link),)))
+            steps.append(ChurnStep(t + down, (ChurnOp("recover", link=link),)))
+            t += down + rng.exponential(mtbf)
+    return steps
+
+
+def node_failure_trace(
+    net: NetworkGraph,
+    rng: np.random.RandomState,
+    *,
+    t_end: float,
+    n_nodes: int = 1,
+    mtbf: float = 40.0,
+    mttr: float = 6.0,
+) -> list[ChurnStep]:
+    """Whole-node outages (every incident link fails) with guaranteed
+    recovery, on ``n_nodes`` randomly sampled nodes."""
+    chosen = rng.choice(net.n_nodes, size=min(n_nodes, net.n_nodes), replace=False)
+    steps: list[ChurnStep] = []
+    for node in sorted(int(c) for c in chosen):
+        t = rng.exponential(mtbf)
+        while t < t_end:
+            down = rng.exponential(mttr)
+            steps.append(ChurnStep(t, (ChurnOp("fail_node", node=node),)))
+            steps.append(ChurnStep(t + down, (ChurnOp("recover_node", node=node),)))
+            t += down + rng.exponential(mtbf)
+    return steps
+
+
+def mmpp_dip_trace(
+    net: NetworkGraph,
+    rng: np.random.RandomState,
+    *,
+    t_end: float,
+    dip_frac: float = 0.3,
+    dwell_up: float = 15.0,
+    dwell_dip: float = 4.0,
+    subset_frac: float = 0.35,
+) -> list[ChurnStep]:
+    """Markov-modulated correlated bandwidth dips: a two-state process picks
+    a fixed random link subset (a congested region) whose capacity drops to
+    ``dip_frac`` of base while the dip state dwells, then restores — the
+    cross-link-correlated congestion pattern independent per-link walks never
+    produce."""
+    n_sub = max(1, int(round(subset_frac * len(net.links))))
+    subset = sorted(int(c) for c in rng.choice(len(net.links), size=n_sub, replace=False))
+    steps: list[ChurnStep] = []
+    t = rng.exponential(dwell_up)
+    while t < t_end:
+        down = rng.exponential(dwell_dip)
+        dip_ops = tuple(
+            ChurnOp("capacity", link=net.links[l], capacity=float(net.base_capacity[l] * dip_frac))
+            for l in subset
+        )
+        lift_ops = tuple(
+            ChurnOp("capacity", link=net.links[l], capacity=float(net.base_capacity[l]))
+            for l in subset
+        )
+        steps.append(ChurnStep(t, dip_ops))
+        steps.append(ChurnStep(t + down, lift_ops))
+        t += down + rng.exponential(dwell_up)
+    return steps
+
+
+def churn_trace(
+    net: NetworkGraph,
+    rng: np.random.RandomState,
+    *,
+    t_end: float,
+    drift: bool = True,
+    failures: bool = True,
+    node_failures: bool = True,
+    dips: bool = True,
+) -> list[ChurnStep]:
+    """The default combined trace: drift + link/node failures + MMPP dips,
+    merged in time order (ties keep generator order, so application is
+    deterministic). Processes draw from one shared ``rng`` sequentially, so
+    a given (net, seed) always produces the same trace."""
+    steps: list[ChurnStep] = []
+    if drift:
+        steps += capacity_drift_trace(net, rng, t_end=t_end)
+    if failures:
+        steps += link_failure_trace(net, rng, t_end=t_end)
+    if node_failures:
+        steps += node_failure_trace(net, rng, t_end=t_end)
+    if dips:
+        steps += mmpp_dip_trace(net, rng, t_end=t_end)
+    return sorted(steps, key=lambda s: s.time)
 
 
 def compute_nodes(net: NetworkGraph, *, min_mem: float = 0.5) -> list[int]:
@@ -197,12 +424,17 @@ def heterogeneous_mesh(
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """A reproducible (topology, workload) pair for fleet evaluation."""
+    """A reproducible (topology, workload) pair for fleet evaluation, plus an
+    optional churn-trace factory for dynamic-network scenarios."""
 
     name: str
     description: str
     make_net: Callable[[np.random.RandomState], NetworkGraph]
     make_arrivals: Callable[[NetworkGraph, np.random.RandomState, int], Arrivals]
+    # (net, rng, t_end) -> churn trace; None for static-network scenarios
+    make_churn: Callable[[NetworkGraph, np.random.RandomState, float], list[ChurnStep]] | None = (
+        None
+    )
 
     def build(
         self, *, seed: int = 0, n_jobs: int = 8
@@ -210,6 +442,20 @@ class Scenario:
         net = self.make_net(np.random.RandomState(seed))
         arrivals = self.make_arrivals(net, np.random.RandomState(seed + 1), n_jobs)
         return net, arrivals
+
+    def build_churn(
+        self, *, seed: int = 0, n_jobs: int = 8, churn_margin: float = 1.25
+    ) -> tuple[NetworkGraph, Arrivals, list[ChurnStep]]:
+        """Like :meth:`build` but also generates the churn trace, spanning
+        the arrival horizon times ``churn_margin`` so churn keeps hitting the
+        backlog-draining tail of the simulation. Static scenarios return an
+        empty trace."""
+        net, arrivals = self.build(seed=seed, n_jobs=n_jobs)
+        if self.make_churn is None:
+            return net, arrivals, []
+        t_end = (max(t for t, _, _ in arrivals) if arrivals else 0.0) * churn_margin + 10.0
+        churn = self.make_churn(net, np.random.RandomState(seed + 2), t_end)
+        return net, arrivals, churn
 
 
 def _steady(lam: float = 0.5, total_units: float = 12.0):
@@ -274,6 +520,17 @@ SCENARIOS: dict[str, Scenario] = {
             "Waxman WAN federation, bursty arrivals",
             lambda rng: wan_mesh(16, rng=rng),
             _bursty(),
+        ),
+        Scenario(
+            "wan-mesh-churn",
+            "Waxman WAN federation under network churn: per-link capacity "
+            "drift, link/node failure+recovery cycles, and MMPP-correlated "
+            "bandwidth dips — the dynamic geo-distributed regime (Oakestra, "
+            "KCES) where the scheduler must re-route and re-solve running "
+            "jobs as the network moves under them",
+            lambda rng: wan_mesh(16, rng=rng),
+            _bursty(),
+            make_churn=lambda net, rng, t_end: churn_trace(net, rng, t_end=t_end),
         ),
         Scenario(
             "wan-mesh-xl",

@@ -28,7 +28,7 @@ from typing import Generator
 from ..core.graph import JobGraph
 from ..core.jrba import JRBAEngine
 from ..core.online import OnlineScheduler, RoundRequest, SimResult
-from ..core.scenarios import SCENARIOS
+from ..core.scenarios import SCENARIOS, ChurnStep
 from .telemetry import FleetTelemetry, RoundRecord
 
 __all__ = [
@@ -51,12 +51,15 @@ FLEET_SCENARIOS = ("edge-mesh", "edge-cloud", "fat-tree", "hetero-low")
 @dataclasses.dataclass
 class FleetSim:
     """One lane of the fleet: a scheduler plus its arrival trace. ``name``
-    groups lanes in telemetry (e.g. the scenario that generated them)."""
+    groups lanes in telemetry (e.g. the scenario that generated them);
+    ``network_events`` is an optional churn trace for dynamic-network lanes
+    (see ``core.scenarios``)."""
 
     scheduler: OnlineScheduler
     arrivals: Arrivals
     name: str = ""
     max_time: float = 1e6
+    network_events: list[ChurnStep] | None = None
 
 
 def build_scenario_fleet(
@@ -149,7 +152,12 @@ class FleetRuntime:
         solver0 = dataclasses.asdict(engine.stats)
         t_start = time.perf_counter()
         lanes = [
-            _Lane(sim=s, gen=s.scheduler.step(s.arrivals, max_time=s.max_time))
+            _Lane(
+                sim=s,
+                gen=s.scheduler.step(
+                    s.arrivals, max_time=s.max_time, network_events=s.network_events
+                ),
+            )
             for s in sims
         ]
         for lane in lanes:  # prime: advance to the first solve (or completion)

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 from typing import TYPE_CHECKING
 
 import numpy as np
@@ -76,6 +77,7 @@ class FleetTelemetry:
             by_name.setdefault(name or "sim", []).append(res)
         spec_accepted = sum(r.spec_accepted for r in results)
         spec_repaired = sum(r.spec_repaired for r in results)
+        churn_events = sum(r.churn_events for r in results)
         self.summary = {
             "n_sims": len(results),
             "n_rounds": len(self.rounds),
@@ -102,6 +104,21 @@ class FleetTelemetry:
                     else None
                 ),
             },
+            # network churn across the fleet: "network" events applied,
+            # running jobs re-solved because a churn step touched their
+            # footprint, re-solves that changed the route set, and re-solves
+            # that left a job stalled until a later recovery; None when no
+            # lane carried a churn trace
+            "churn": (
+                {
+                    "events": churn_events,
+                    "resolves": sum(r.churn_resolves for r in results),
+                    "reroutes": sum(r.churn_reroutes for r in results),
+                    "stalls": sum(r.churn_stalls for r in results),
+                }
+                if churn_events
+                else None
+            ),
             # solver-formulation telemetry for THIS run (mode, relaxation
             # steps actually run vs the fixed dense budget, analytic
             # single-flow fast paths, program-tensor cache traffic) — see
@@ -143,8 +160,31 @@ class FleetTelemetry:
     # -- export ---------------------------------------------------------------
     def to_jsonl(self, path: str) -> None:
         """One ``{"type": "round", ...}`` line per dispatch round, then a
-        final ``{"type": "summary", ...}`` line."""
+        final ``{"type": "summary", ...}`` line.
+
+        Strict RFC 8259 output: summary metrics can be non-finite (e.g. an
+        all-idle lane's ``avg_scheduled_span`` is ``inf``), and bare
+        ``json.dumps`` would emit the non-standard ``Infinity``/``NaN``
+        tokens, producing a trace strict parsers reject. Non-finite values
+        are mapped to ``null`` and ``allow_nan=False`` guarantees none slip
+        through."""
         with open(path, "w") as f:
             for r in self.rounds:
-                f.write(json.dumps({"type": "round", **r.as_dict()}) + "\n")
-            f.write(json.dumps({"type": "summary", **self.summary}) + "\n")
+                f.write(_dumps_strict({"type": "round", **r.as_dict()}) + "\n")
+            f.write(_dumps_strict({"type": "summary", **self.summary}) + "\n")
+
+
+def _sanitize_nonfinite(obj):
+    """Recursively replace non-finite floats (inf / -inf / nan) with None so
+    the result serializes under RFC 8259 (which has no such literals)."""
+    if isinstance(obj, float) and not math.isfinite(obj):
+        return None
+    if isinstance(obj, dict):
+        return {k: _sanitize_nonfinite(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_sanitize_nonfinite(v) for v in obj]
+    return obj
+
+
+def _dumps_strict(obj) -> str:
+    return json.dumps(_sanitize_nonfinite(obj), allow_nan=False)

@@ -1,0 +1,430 @@
+"""Dynamic-network churn: the graph mutation API, trace generators, the
+online scheduler's ``"network"`` event kind (re-route + re-solve + stall /
+recovery), cache and speculation invalidation, and the dense-vs-sparse
+record-identity acceptance under churn."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChurnOp,
+    ChurnStep,
+    Flow,
+    JobGraph,
+    JRBAEngine,
+    NetworkGraph,
+    OnlineScheduler,
+    Task,
+    apply_churn_step,
+    capacity_drift_trace,
+    churn_trace,
+    get_scenario,
+    jrba,
+    link_failure_trace,
+    node_failure_trace,
+)
+
+CHURN_SCENARIO = "wan-mesh-churn"
+
+
+def square_net(bw=5.0, mem=(0.5, 0.5, 8.0, 0.5)):
+    """0-1-2-3 ring: two disjoint routes between any node pair."""
+    links = [(0, 1, bw), (1, 2, bw), (2, 3, bw), (0, 3, bw)]
+    return NetworkGraph([10.0] * 4, list(mem), links)
+
+
+def one_flow_job(volume=2.0, workload=10.0, mem=4.0):
+    """Pinned source on node 0, one big task that only fits on node 2 —
+    forces a single 0 -> 2 flow with exactly two candidate routes."""
+    return JobGraph(
+        [Task("source", 0.0, 0.0, pinned_node=0), Task("work", workload, mem)],
+        [(0, 1, volume)],
+    )
+
+
+def records_equal(a, b):
+    return all(
+        ra.schedule_time == rb.schedule_time and ra.finish_time == rb.finish_time
+        for ra, rb in zip(a.records, b.records)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Graph mutation API
+# ---------------------------------------------------------------------------
+def test_capacity_mutation_keeps_shapes():
+    net = square_net()
+    l = net.link_id(0, 1)
+    v0 = net.topology_version
+    net.set_link_capacity(0, 1, 2.5)
+    assert net.capacity[l] == 2.5
+    assert net.bandwidth[(0, 1)] == 2.5
+    assert len(net.links) == 4 and net.topology_version == v0  # no topo change
+    assert net.base_capacity[l] == 5.0  # drift anchor untouched
+
+
+def test_fail_recover_link_roundtrip():
+    net = square_net()
+    l = net.link_id(0, 1)
+    assert net.fail_link(0, 1)
+    assert not net.link_alive[l]
+    assert net.capacity[l] == 0.0
+    assert 1 not in net.neighbors(0) and 0 not in net.neighbors(1)
+    assert not net.fail_link(0, 1)  # already dead: no-op
+    v = net.topology_version
+    assert net.recover_link(0, 1)
+    assert net.link_alive[l] and net.capacity[l] == 5.0
+    assert 1 in net.neighbors(0)
+    assert net.topology_version == v + 1
+    assert not net.recover_link(0, 1)  # already alive: no-op
+
+
+def test_drift_on_dead_link_applies_at_recovery():
+    net = square_net()
+    net.fail_link(0, 1)
+    net.set_link_capacity(0, 1, 3.0)  # drift while down
+    assert net.capacity[net.link_id(0, 1)] == 0.0  # still dead
+    net.recover_link(0, 1)
+    assert net.capacity[net.link_id(0, 1)] == 3.0
+
+
+def test_fail_recover_node():
+    net = square_net()
+    failed = net.fail_node(0)
+    assert sorted(failed) == sorted([net.link_id(0, 1), net.link_id(0, 3)])
+    assert net.neighbors(0) == set()
+    recovered = net.recover_node(0)
+    assert sorted(recovered) == sorted(failed)
+    assert net.neighbors(0) == {1, 3}
+
+
+def test_restore_topology():
+    net = square_net()
+    net.fail_link(0, 1)
+    net.set_link_capacity(1, 2, 0.7)
+    net.fail_node(3)
+    net.restore_topology()
+    assert net.link_alive.all()
+    np.testing.assert_array_equal(net.capacity, net.base_capacity)
+    assert net.neighbors(0) == {1, 3}
+    assert net.bandwidth[(1, 2)] == net.base_capacity[net.link_id(1, 2)]
+
+
+def test_apply_churn_step_touched_mask():
+    net = square_net()
+    step = ChurnStep(
+        1.0,
+        (
+            ChurnOp("capacity", link=(0, 1), capacity=1.0),
+            ChurnOp("capacity", link=(1, 2), capacity=5.0),  # same value: no-op
+            ChurnOp("fail", link=(2, 3)),
+        ),
+    )
+    touched, topo = apply_churn_step(net, step)
+    assert topo
+    assert touched[net.link_id(0, 1)]
+    assert not touched[net.link_id(1, 2)]
+    assert touched[net.link_id(2, 3)]
+    # applying the failure again is a full no-op
+    touched2, topo2 = apply_churn_step(net, ChurnStep(2.0, (ChurnOp("fail", link=(2, 3)),)))
+    assert not topo2 and not touched2.any()
+
+
+# ---------------------------------------------------------------------------
+# Trace generators
+# ---------------------------------------------------------------------------
+def test_traces_reproducible_and_sorted():
+    net = get_scenario(CHURN_SCENARIO).make_net(np.random.RandomState(0))
+    a = churn_trace(net, np.random.RandomState(7), t_end=30.0)
+    b = churn_trace(net, np.random.RandomState(7), t_end=30.0)
+    assert a == b
+    times = [s.time for s in a]
+    assert times == sorted(times)
+    assert len(a) > 0
+
+
+def test_drift_trace_stays_bounded():
+    net = square_net()
+    steps = capacity_drift_trace(
+        net, np.random.RandomState(0), t_end=200.0, dt=1.0, frac=1.0, lo=0.4, hi=1.6
+    )
+    for s in steps:
+        for op in s.ops:
+            base = net.base_capacity[net.link_id(*op.link)]
+            assert 0.4 * base - 1e-9 <= op.capacity <= 1.6 * base + 1e-9
+
+
+@pytest.mark.parametrize("gen", [link_failure_trace, node_failure_trace])
+def test_every_failure_has_a_recovery(gen):
+    net = get_scenario(CHURN_SCENARIO).make_net(np.random.RandomState(1))
+    steps = gen(net, np.random.RandomState(3), t_end=40.0, mtbf=10.0, mttr=3.0)
+    down = set()
+    for s in steps:
+        for op in s.ops:
+            key = op.link if op.link is not None else op.node
+            if op.kind.startswith("fail"):
+                down.add(key)
+            else:
+                down.discard(key)
+    assert not down  # trace always heals the network
+
+
+def test_full_trace_application_heals():
+    sc = get_scenario(CHURN_SCENARIO)
+    net, _, churn = sc.build_churn(seed=3, n_jobs=4)
+    for step in churn:
+        apply_churn_step(net, step)
+    assert net.link_alive.all()
+
+
+# ---------------------------------------------------------------------------
+# Engine cache invalidation + partitioned solves
+# ---------------------------------------------------------------------------
+def test_engine_path_cache_follows_topology():
+    net = square_net()
+    eng = JRBAEngine(k=2, n_iters=40)
+    flows = [Flow(0, 2, 1.0)]
+    mask = eng.candidate_links(net, flows)
+    assert mask[net.link_id(0, 1)] and mask[net.link_id(0, 3)]
+    net.fail_link(0, 1)  # no explicit invalidate: the lazy version check fires
+    mask = eng.candidate_links(net, flows)
+    assert not mask[net.link_id(0, 1)]
+    assert mask[net.link_id(0, 3)] and mask[net.link_id(2, 3)]
+    net.recover_link(0, 1)
+    assert eng.candidate_links(net, flows)[net.link_id(0, 1)]
+
+
+def test_program_cache_refreshes_capacity_after_drift():
+    net = square_net()
+    eng = JRBAEngine(k=2, n_iters=40)
+    flows = [Flow(0, 2, 1.0), Flow(0, 2, 1.5)]
+    eng.solve(net, flows)
+    misses0 = eng.stats.prog_cache_misses
+    net.set_link_capacity(0, 1, 1.25)  # drift only: cache entry must survive
+    res = eng.solve(net, flows)
+    assert eng.stats.prog_cache_misses == misses0
+    assert eng.stats.prog_cache_hits >= 1
+    # the cached program's capacity is the fresh drifted vector
+    prog = eng.build(net, flows)
+    assert prog.capacity[net.link_id(0, 1)] == np.float32(1.25)
+    assert res is not None
+
+
+@pytest.mark.parametrize("solver", ["dense", "sparse"])
+def test_partitioned_flow_gets_zero_bandwidth(solver):
+    net = NetworkGraph([10.0] * 4, [8.0] * 4, [(0, 1, 5.0), (2, 3, 5.0)])
+    res = jrba(net, [Flow(0, 2, 1.0), Flow(0, 1, 1.0)], k=2, n_iters=40, solver=solver)
+    assert res.bandwidth[0] == 0.0 and res.routes[0] == []
+    assert res.bandwidth[1] > 0.0
+    assert res.span == float("inf")
+
+
+# ---------------------------------------------------------------------------
+# Online scheduling under churn
+# ---------------------------------------------------------------------------
+def test_reroute_stall_and_recovery():
+    """Deterministic storyline: the direct route dies (re-route onto the
+    detour), then the detour dies too (stall), then the network heals (the
+    job resumes and finishes)."""
+    net = square_net()
+    arrivals = [(0.0, one_flow_job(), 4.0)]
+    churn = [
+        ChurnStep(1.0, (ChurnOp("fail", link=(1, 2)),)),  # kill half the detour
+        ChurnStep(2.0, (ChurnOp("fail", link=(0, 3)),)),  # kill the direct side
+        ChurnStep(5.0, (ChurnOp("recover", link=(0, 3)),)),
+        ChurnStep(7.0, (ChurnOp("recover", link=(1, 2)),)),
+    ]
+    sched = OnlineScheduler(net, "OTFS", k_paths=2, jrba_iters=40)
+    res = sched.run(arrivals, network_events=churn)
+    r = res.records[0]
+    assert res.unfinished == 0 and r.done
+    assert res.churn_events == 4
+    assert res.churn_stalls >= 1  # the 2.0-5.0 window has no 0->2 route
+    assert res.churn_reroutes >= 1
+    # three seconds of outage must show up in the finish time: without churn
+    # the job finishes at 4 * span; with the stall it finishes later
+    no_churn = OnlineScheduler(square_net(), "OTFS", k_paths=2, jrba_iters=40).run(
+        [(0.0, one_flow_job(), 4.0)]
+    )
+    assert r.finish_time > no_churn.records[0].finish_time + 2.0
+
+
+@pytest.mark.parametrize("policy", ["TP", "OTFA", "LR"])
+def test_outage_delays_refresh_policies_too(policy):
+    """Regression: when an outage drives a running job's span non-finite,
+    ``set_finish_event`` must invalidate ``finish_time`` — otherwise the
+    pre-outage finish event still matches and the job completes at full
+    speed through a total outage (this bit every policy except OTFS, whose
+    churn path invalidated locally)."""
+    def run(churn):
+        # default square_net memory: the work task cannot colocate with the
+        # pinned source on node 0, so a real 0 -> 2 flow always exists
+        net = square_net()
+        arrivals = [(0.0, one_flow_job(), 4.0)]
+        return OnlineScheduler(net, policy, k_paths=2, jrba_iters=40).run(
+            arrivals, network_events=churn
+        )
+
+    outage = [
+        # node 0 is the source: isolating it kills every 0 -> 2 route
+        ChurnStep(1.0, (ChurnOp("fail", link=(0, 1)), ChurnOp("fail", link=(0, 3)))),
+        ChurnStep(5.0, (ChurnOp("recover", link=(0, 1)), ChurnOp("recover", link=(0, 3)))),
+    ]
+    res = run(outage)
+    baseline = run([])
+    r, base = res.records[0], baseline.records[0]
+    assert res.unfinished == 0 and r.done
+    assert r.flows, "placement must produce a cross-node flow for this test"
+    # the 4-second outage must appear in the finish time
+    assert r.finish_time >= base.finish_time + 3.5
+
+
+def test_restore_topology_invalidates_drift_era_path_caches():
+    """Regression: a healed trace leaves every link alive, but candidate
+    paths enumerated while capacities were drifted (Yen tie-breaks on live
+    bandwidth) are not the pristine-network paths — a re-run on the same
+    (net, engine) must not replay them."""
+    # two 2-hop 0->2 routes: A (via 1, bw 5) beats B (via 3, bw 4) on the
+    # tie-break at base capacities, but drift pushes B to 50 mid-run
+    net = NetworkGraph(
+        [10.0] * 4,
+        [0.5, 0.5, 8.0, 0.5],
+        [(0, 1, 5.0), (1, 2, 5.0), (0, 3, 4.0), (3, 2, 4.0)],
+    )
+    churn = [
+        ChurnStep(0.5, (ChurnOp("fail", link=(0, 1)),)),
+        ChurnStep(
+            1.0,
+            (
+                ChurnOp("capacity", link=(0, 3), capacity=50.0),
+                ChurnOp("capacity", link=(3, 2), capacity=50.0),
+            ),
+        ),
+        ChurnStep(1.5, (ChurnOp("recover", link=(0, 1)),)),
+    ]
+    # tiny workload: the span is transfer-dominated, so taking route B
+    # (bw 4) instead of A (bw 5) at admission visibly shifts finish times
+    arrivals = [(0.0, one_flow_job(workload=1.0), 8.0)]
+    eng = JRBAEngine(k=1, n_iters=40)
+    a = OnlineScheduler(net, "OTFS", engine=eng).run(arrivals, network_events=churn)
+    b = OnlineScheduler(net, "OTFS", engine=eng).run(arrivals, network_events=churn)
+    assert a.records[0].flows and records_equal(a, b)
+
+
+def test_degraded_network_defers_admission():
+    """A job arriving while its source is partitioned waits in the queue and
+    is admitted by the recovery event's scheduling round."""
+    net = square_net()
+    churn = [
+        ChurnStep(0.5, (ChurnOp("fail_node", node=0),)),
+        ChurnStep(6.0, (ChurnOp("recover_node", node=0),)),
+    ]
+    arrivals = [(1.0, one_flow_job(), 3.0)]
+    res = OnlineScheduler(net, "OTFS", k_paths=2, jrba_iters=40).run(
+        arrivals, network_events=churn
+    )
+    r = res.records[0]
+    assert res.unfinished == 0
+    assert r.schedule_time == 6.0  # admitted exactly at recovery
+    assert r.waiting_time >= 5.0
+
+
+@pytest.mark.parametrize("policy", ["OTFS", "OTFA", "TP"])
+def test_churn_scenario_all_jobs_finish(policy):
+    net, arrivals, churn = get_scenario(CHURN_SCENARIO).build_churn(seed=0, n_jobs=5)
+    assert churn, "churn scenario must carry a non-empty trace"
+    sched = OnlineScheduler(net, policy, k_paths=3, jrba_iters=60)
+    res = sched.run(arrivals, network_events=churn)
+    assert res.unfinished == 0
+    assert res.churn_events == len(churn)
+    assert all(r.done for r in res.records)
+    # memory conservation holds through arbitrary churn
+    np.testing.assert_allclose(net.mem_avail, net.mem_max)
+
+
+def test_rerun_on_mutated_network_is_reproducible():
+    sc = get_scenario(CHURN_SCENARIO)
+    net, arrivals, churn = sc.build_churn(seed=1, n_jobs=4)
+    eng = JRBAEngine(k=3, n_iters=60)
+    a = OnlineScheduler(net, "OTFS", engine=eng).run(arrivals, network_events=churn)
+    # second run on the SAME mutated net object: restore_topology + the
+    # engine's topology-version check make it byte-identical
+    b = OnlineScheduler(net, "OTFS", engine=eng).run(arrivals, network_events=churn)
+    assert records_equal(a, b)
+
+
+def test_dense_sparse_records_identical_under_churn():
+    """The acceptance criterion: the dense reference and the production
+    (sparse / pallas-interpret via REPRO_JRBA_SOLVER) formulations must agree
+    bit-for-bit on scheduler records while the network moves under them."""
+    sc = get_scenario(CHURN_SCENARIO)
+    for seed in (0, 1):
+        runs = {}
+        for solver in ("dense", "auto"):
+            net, arrivals, churn = sc.build_churn(seed=seed, n_jobs=6)
+            sched = OnlineScheduler(
+                net, "OTFS", k_paths=3, jrba_iters=80, solver=solver
+            )
+            runs[solver] = sched.run(arrivals, network_events=churn)
+        assert runs["dense"].n_scheduled == runs["auto"].n_scheduled
+        assert records_equal(runs["dense"], runs["auto"])
+        assert runs["dense"].churn_resolves == runs["auto"].churn_resolves
+
+
+def test_speculation_preserves_sequential_semantics_under_churn():
+    sc = get_scenario(CHURN_SCENARIO)
+    runs = {}
+    for speculate in (False, True):
+        net, arrivals, churn = sc.build_churn(seed=2, n_jobs=6)
+        sched = OnlineScheduler(
+            net, "OTFS", k_paths=3, jrba_iters=60, speculate=speculate
+        )
+        runs[speculate] = sched.run(arrivals, network_events=churn)
+    assert records_equal(runs[False], runs[True])
+
+
+def test_fleet_runtime_carries_churn_lanes(tmp_path):
+    """Churn lanes co-schedule like any other: lockstep fleet records match
+    solo runs, and the telemetry summary carries the churn block in a
+    strictly-parseable JSONL trace."""
+    import json
+
+    from repro.fleet import FleetRuntime, FleetSim
+
+    sc = get_scenario(CHURN_SCENARIO)
+
+    def lanes(engine):
+        out = []
+        for i, policy in enumerate(("OTFS", "OTFA")):
+            net, arrivals, churn = sc.build_churn(seed=10 + i, n_jobs=3)
+            out.append(
+                FleetSim(
+                    OnlineScheduler(net, policy, engine=engine),
+                    arrivals,
+                    name=f"{CHURN_SCENARIO}/{policy}",
+                    network_events=churn,
+                )
+            )
+        return out
+
+    solo_eng = JRBAEngine(k=3, n_iters=50)
+    solo = [
+        s.scheduler.run(s.arrivals, network_events=s.network_events)
+        for s in lanes(solo_eng)
+    ]
+    fleet_eng = JRBAEngine(k=3, n_iters=50)
+    fleet = FleetRuntime(fleet_eng).run(lanes(fleet_eng))
+    for a, b in zip(solo, fleet.results):
+        assert records_equal(a, b)
+    churn_block = fleet.telemetry.summary["churn"]
+    assert churn_block["events"] == sum(r.churn_events for r in fleet.results) > 0
+    assert churn_block["resolves"] == sum(r.churn_resolves for r in fleet.results)
+    path = tmp_path / "trace.jsonl"
+    fleet.telemetry.to_jsonl(str(path))
+
+    def reject(const):
+        raise ValueError(f"non-RFC JSON constant {const!r}")
+
+    lines = path.read_text().splitlines()
+    parsed = [json.loads(line, parse_constant=reject) for line in lines]
+    assert parsed[-1]["type"] == "summary"
+    assert parsed[-1]["churn"]["events"] == churn_block["events"]

@@ -94,6 +94,35 @@ def test_fleet_telemetry_trace(tmp_path):
         assert rec["n_requests"] >= rec["batch_calls"] >= 0
 
 
+def test_telemetry_jsonl_is_strict_json_with_nonfinite_metrics(tmp_path):
+    """Regression: an all-idle simulation yields inf summary metrics
+    (``avg_waiting_time``/``avg_scheduled_span`` with nothing scheduled),
+    which bare ``json.dumps`` serializes as the non-RFC ``Infinity`` token —
+    an unparseable trace for strict readers. ``to_jsonl`` must map
+    non-finite values to null and round-trip through a strict parser."""
+    import json
+
+    from repro.core.online import SimResult
+    from repro.fleet import FleetTelemetry
+
+    idle = SimResult(records=[], sched_overhead=0.0, unfinished=0)
+    assert idle.avg_scheduled_span == float("inf")  # the non-finite source
+    telemetry = FleetTelemetry()
+    telemetry.finalize(names=["idle"], results=[idle], wall_seconds=0.25)
+    path = tmp_path / "trace.jsonl"
+    telemetry.to_jsonl(str(path))
+
+    def reject(const):
+        raise ValueError(f"non-RFC JSON constant {const!r}")
+
+    lines = path.read_text().splitlines()
+    parsed = [json.loads(line, parse_constant=reject) for line in lines]
+    summary = parsed[-1]
+    assert summary["type"] == "summary"
+    assert summary["scenarios"]["idle"]["avg_scheduled_span"] is None
+    assert summary["churn"] is None  # no churn lanes -> block absent
+
+
 def test_fleet_rejects_mismatched_hyperparameters():
     shared = JRBAEngine(k=3, n_iters=100)
     sims = _build_fleet(2, engine=shared, n_jobs=2)

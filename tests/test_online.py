@@ -9,8 +9,10 @@ from repro.core import (
     OnlineScheduler,
     Task,
     JobGraph,
+    get_scenario,
     poisson_arrivals,
     random_edge_network,
+    scenario_names,
 )
 
 
@@ -43,6 +45,51 @@ def test_resources_fully_released():
     sim = OnlineScheduler(net, "OTFS", jrba_iters=100)
     sim.run(make_arrivals())
     np.testing.assert_allclose(net.mem_avail, net.mem_max)
+
+
+@pytest.mark.parametrize("name", scenario_names())
+def test_memory_conserved_across_scenario_suite(name):
+    """Admission debit must equal finish credit: after a full simulation
+    every ``net.mem_avail`` entry is back at its initial value, on every
+    registry scenario (the online loop's release path skips pinned tasks,
+    symmetrically with the allocators' admission path)."""
+    engine = JRBAEngine(k=3, n_iters=50)
+    for policy in ("OTFS", "LR"):
+        net, arrivals = get_scenario(name).build(seed=4, n_jobs=3)
+        sched = OnlineScheduler(net, policy, engine=engine, max_acceptable_span=1e5)
+        res = sched.run(arrivals)
+        if policy == "OTFS":  # LR can't place whole jobs on every topology
+            assert res.n_scheduled > 0, f"{name}/OTFS scheduled nothing"
+            assert res.unfinished == 0, f"{name}/OTFS left jobs unfinished"
+        np.testing.assert_allclose(
+            net.mem_avail, net.mem_max, err_msg=f"{name}/{policy} leaked memory"
+        )
+
+
+def test_memory_conserved_with_heavy_pinned_tasks():
+    """Jobs whose pinned source claims real memory: the allocator must not
+    debit what the finish handler never credits (the asymmetric release
+    loop), or every such job leaks its source's memory."""
+    net = make_net()
+    rng = np.random.RandomState(0)
+    arrivals = []
+    t = 0.0
+    for i in range(4):
+        t += float(rng.exponential(2.0))
+        job = JobGraph(
+            [
+                Task("cam", 0.0, 2.5, pinned_node=int(rng.randint(net.n_nodes))),
+                Task("work", 12.0, 2.0),
+                Task("sink", 3.0, 1.0),
+            ],
+            [(0, 1, 2.0), (1, 2, 0.5)],
+        )
+        arrivals.append((t, job, 5.0))
+    for policy in ("OTFS", "OTFA", "TP"):
+        net = make_net()
+        res = OnlineScheduler(net, policy, jrba_iters=60).run(arrivals)
+        assert res.unfinished == 0
+        np.testing.assert_allclose(net.mem_avail, net.mem_max)
 
 
 def test_partitioning_beats_whole_job_on_thin_links():

@@ -124,6 +124,40 @@ class TestAllocators:
         # placing on node1 moves its util toward the mean; node0 can't fit anyway
         assert all(alloc.assignment[1:] == 1)
 
+    def test_greedy_never_debits_pinned_memory(self):
+        """Pinned sources hold their own hardware: the online finish handler
+        never credits pinned-task memory back, so the allocator must not
+        debit it either — asymmetry here leaks memory on every pinned job."""
+        net = NetworkGraph([10.0, 100.0], [8.0, 8.0], [(0, 1, 100.0)])
+        tasks = [
+            Task("cam", 0.0, 3.0, pinned_node=0),  # pinned AND memory-hungry
+            Task("work", 4.0, 2.0),
+        ]
+        job = JobGraph(tasks, [(0, 1, 1.0)])
+        before = net.mem_avail.copy()
+        alloc, _ = allocate_greedy(net, job, commit=True)
+        assert alloc.feasible
+        used = before - net.mem_avail
+        assert used[int(alloc.assignment[1])] == pytest.approx(2.0)
+        assert used.sum() == pytest.approx(2.0)  # the pinned 3.0 is not drawn
+
+    def test_equal_share_colocated_flow_is_finite(self):
+        """Regression: a zero-link route (co-located src == dst) used to get
+        float('inf') bandwidth, which leaked into JobRecord.bandwidths and
+        telemetry. The sentinel is finite and the transfer still costs ~0."""
+        from repro.core import Flow, equal_share_bandwidth
+        from repro.core.allocation import COLOCATED_BANDWIDTH
+
+        net = grid_net()
+        routes, bands = equal_share_bandwidth(
+            net, [Flow(0, 0, 2.0), Flow(0, 1, 2.0)]
+        )
+        assert routes[0] == [0]
+        assert np.isfinite(bands).all()
+        assert bands[0] == COLOCATED_BANDWIDTH
+        assert 2.0 / bands[0] < 1e-300  # transfer time indistinguishable from 0
+        assert bands[1] == pytest.approx(net.capacity[net.link_id(0, 1)])
+
     def test_video_job_structure(self):
         rng = np.random.RandomState(0)
         job = video_analytics_job(rng, source_node=2)
