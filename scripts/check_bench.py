@@ -62,9 +62,10 @@ def _ratio_metrics(report: dict, *, absolute: bool = False) -> dict[str, float]:
     # topologies the solver is dispatch-bound (its ~1x ratio swings with
     # host load), and even the compute-dominated wan-mesh-xl ratio moves
     # ~±30% run to run — the acceptance floor is enforced as an absolute
-    # cap in _check_caps instead. The churn section carries no timing
-    # ratios either: its metrics are deterministic counters, capped
-    # absolutely (record dev == 0, unfinished == 0, counters > 0) below.
+    # cap in _check_caps instead. The churn and churn_spec sections carry no
+    # timing ratios either: their metrics are deterministic counters, capped
+    # absolutely (record dev == 0, unfinished == 0, counters > 0, dispatch
+    # collapse >= 1.5x) below.
     return out
 
 
@@ -124,10 +125,46 @@ def _check_caps(report: dict, label: str) -> list[str]:
                 failures.append(
                     f"{label}: churn.{counter} == 0 (churn machinery never fired)"
                 )
+    cspec = report.get("churn_spec", {})
+    dev = cspec.get("max_record_rel_dev")
+    if dev is not None and dev != 0.0:
+        failures.append(
+            f"{label}: churn_spec.max_record_rel_dev {dev:.3e} != 0 "
+            "(batched churn re-solves broke sequential semantics)"
+        )
+    if not report.get("smoke") and cspec:
+        # deterministic counters on pinned seeds, so floored absolutely:
+        # footprint scoping must keep speculations alive across churn,
+        # batched re-solves must accept speculative solutions, and wide
+        # steps (>= 4 affected jobs) must actually collapse dispatches
+        if cspec.get("spec_survived") == 0:
+            failures.append(
+                f"{label}: churn_spec.spec_survived == 0 "
+                "(footprint scoping never kept a speculation alive)"
+            )
+        rate = cspec.get("spec_accept_rate")
+        if rate is not None and rate <= 0.0:
+            failures.append(
+                f"{label}: churn_spec.spec_accept_rate {rate:.3f} <= 0"
+            )
+        collapse = cspec.get("dispatch_collapse")
+        if collapse is not None and collapse < 1.5:
+            failures.append(
+                f"{label}: churn_spec.dispatch_collapse {collapse:.2f}x < 1.5x "
+                "acceptance floor on wide churn steps"
+            )
     return failures
 
 
-REQUIRED_SECTIONS = ("scenarios", "batch", "cosched", "round_batch", "solver", "churn")
+REQUIRED_SECTIONS = (
+    "scenarios",
+    "batch",
+    "cosched",
+    "round_batch",
+    "solver",
+    "churn",
+    "churn_spec",
+)
 
 
 def compare(

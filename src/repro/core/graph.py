@@ -165,6 +165,11 @@ class NetworkGraph:
         self.base_capacity = self.capacity.copy()
         self.link_alive = np.ones(len(self.links), dtype=bool)
         self.topology_version = 0
+        # bumps on every live-capacity mutation (drift, failure, recovery,
+        # restore) — the validity key for derived-value memos like the
+        # avg-path-bandwidth cache, which may only serve a stored value
+        # computed at the current version
+        self.capacity_version = 0
         self._failed_capacity: dict[int, float] = {}
 
     # -- helpers -----------------------------------------------------------
@@ -186,12 +191,29 @@ class NetworkGraph:
 
     # -- churn: capacity drift + link/node failure & recovery ----------------
     def _drop_host_caches(self) -> None:
-        """Any capacity or topology change invalidates host-side memos keyed
-        on static network state (currently the avg-path-bandwidth cache used
-        by Algorithm 1)."""
+        """Full invalidation of host-side memos keyed on topology (currently
+        the avg-path-bandwidth path memo used by Algorithm 1 — it stores
+        pinned shortest *paths*, values read through to live capacity).
+        Needed when the adjacency gains links: a recovery can create a
+        shorter path between any pair, so no pinned path is provably still
+        shortest. Capacity drift never calls this — the memo is
+        capacity-oblivious by construction."""
         cache = getattr(self, "_avg_bw_cache", None)
         if cache:
             cache.clear()
+
+    def _prune_host_caches(self, link: int) -> None:
+        """Footprint-scoped invalidation of host-side memos after ``link``
+        failed: drop exactly the (src, dst) pairs whose pinned shortest path
+        crossed the dead link. Pairs whose path avoided it provably keep a
+        valid pin (removing an off-path link only deletes *other* paths), and
+        already-disconnected pairs stay disconnected (a failure cannot
+        reconnect anything)."""
+        cache = getattr(self, "_avg_bw_cache", None)
+        if cache:
+            stale = [pair for pair, links in cache.items() if links and link in links]
+            for pair in stale:
+                del cache[pair]
 
     def set_link_capacity(self, u: int, v: int, bw: float) -> None:
         """Drift one link's live capacity in place (the link set and L are
@@ -207,7 +229,10 @@ class NetworkGraph:
             return
         self.bandwidth[key] = float(bw)
         self.capacity[l] = bw
-        self._drop_host_caches()
+        self.capacity_version += 1
+        # no host-cache action: the avg-bw memo pins paths, not values, and
+        # reads capacity live (re-deriving per-pair values lazily off
+        # capacity_version) — drift is visible to the next query for free
 
     def fail_link(self, u: int, v: int) -> bool:
         """Take a link down: remove it from the adjacency (routing stops
@@ -224,7 +249,8 @@ class NetworkGraph:
         self._adj[u].discard(v)
         self._adj[v].discard(u)
         self.topology_version += 1
-        self._drop_host_caches()
+        self.capacity_version += 1
+        self._prune_host_caches(l)
         return True
 
     def recover_link(self, u: int, v: int, capacity: float | None = None) -> bool:
@@ -242,6 +268,7 @@ class NetworkGraph:
         self._adj[u].add(v)
         self._adj[v].add(u)
         self.topology_version += 1
+        self.capacity_version += 1
         self._drop_host_caches()
         return True
 
@@ -281,6 +308,7 @@ class NetworkGraph:
                 self._adj[u].add(v)
                 self._adj[v].add(u)
         self.topology_version += 1
+        self.capacity_version += 1
         self.link_alive[:] = True
         self._failed_capacity.clear()
         self.capacity = self.base_capacity.copy()

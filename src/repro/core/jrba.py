@@ -47,6 +47,7 @@ import functools
 import itertools
 import os
 import time
+import warnings
 import weakref
 from typing import Sequence
 
@@ -843,6 +844,14 @@ class EngineStats:
     fast_path_solves: int = 0  # single-flow programs solved analytically
     prog_cache_hits: int = 0  # program-tensor cache: no rebuild, no re-upload
     prog_cache_misses: int = 0
+    # invalidation traffic (see JRBAEngine.invalidate): full drops vs
+    # footprint-scoped prunes, and how many cached entries each scoped call
+    # kept alive vs evicted — the churn-resilience observable
+    invalidations_full: int = 0
+    invalidations_scoped: int = 0
+    progs_pruned: int = 0  # program-cache entries evicted by scoped calls
+    progs_kept: int = 0  # program-cache entries a scoped call left valid
+    paths_pruned: int = 0  # path-cache entries evicted by scoped calls
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -989,34 +998,87 @@ class JRBAEngine:
             progs.popitem(last=False)
         return prog
 
-    def invalidate_network(self, net: NetworkGraph) -> None:
-        """Drop every per-network cache for ``net``: candidate paths and
-        solve-invariant program tensors. Required after a *topology*
-        mutation (link/node failure or recovery — see the churn API on
-        :class:`NetworkGraph`): cached candidate paths could route over dead
-        links or miss recovered ones, and program usage tensors are built
-        from those paths. Pure capacity drift keeps the caches by design:
-        candidate paths are hop-dominant (bandwidth is only an epsilon
-        tie-break), so within one topology epoch the enumeration is frozen
-        and the cache-hit path re-reads only capacity on every build —
-        deterministic for every solver formulation that replays the same
-        event sequence. (``restore_topology`` bumps the epoch even when all
-        links are alive, precisely because drift-era caches are not the
-        pristine-network ones.) Every cache access
-        also self-checks ``net.topology_version`` (:meth:`_check_topology`),
-        so a missed explicit call degrades to a lazy invalidation rather
-        than a stale solve."""
-        self._paths.pop(net, None)
-        self._progs.pop(net, None)
+    def invalidate(self, net: NetworkGraph, links: np.ndarray | None = None) -> None:
+        """The one invalidation surface for ``net``'s per-network caches
+        (candidate paths and solve-invariant program tensors).
+
+        ``links=None`` — **full topology invalidation**: drop everything.
+        Required when the adjacency *gained* links (a recovery can create a
+        shorter path between any pair, so no cached enumeration is provably
+        still the top-k) and after ``restore_topology`` (drift-era caches
+        tie-break on live bandwidth and are not the pristine-network ones).
+
+        ``links=<bool mask over link ids>`` — **footprint-scoped
+        invalidation**: drop only cache entries whose recorded link footprint
+        intersects the mask. Sound for link *failures* and capacity changes:
+        removing (or drifting) a link that lies on none of an entry's
+        candidate paths cannot change Yen's top-k for that entry — deletion
+        only removes longer paths, and costs of the surviving paths are
+        untouched — so the cached paths, the program's usage/index tensors,
+        and its device mirrors all stay valid; the program-cache hit path
+        refreshes capacity on every build anyway. Path-cache entries record
+        their footprint as the union of their paths' links; cached programs
+        record theirs as ``active_links``.
+
+        Pure capacity drift needs no call at all (the hit path re-reads
+        capacity); the online scheduler calls ``invalidate(net, touched)``
+        for failure-only churn steps and ``invalidate(net)`` when a step
+        recovered links.
+
+        Either form syncs the engine's topology epoch for ``net``. Every
+        cache access still self-checks ``net.topology_version``
+        (:meth:`_check_topology`), so a missed explicit call degrades to a
+        lazy *full* invalidation rather than a stale solve."""
+        if links is None:
+            self._paths.pop(net, None)
+            self._progs.pop(net, None)
+            self.stats.invalidations_full += 1
+            self._topo_seen[net] = net.topology_version
+            return
+        mask = np.asarray(links, dtype=bool)
+        self.stats.invalidations_scoped += 1
+        if mask.any():
+            paths = self._paths.get(net)
+            if paths:
+                stale = [
+                    key
+                    for key, ps in paths.items()
+                    if any(mask[l] for p in ps for l in path_links(net, p))
+                ]
+                for key in stale:
+                    del paths[key]
+                self.stats.paths_pruned += len(stale)
+            progs = self._progs.get(net)
+            if progs:
+                stale = [
+                    key for key, ent in progs.items() if mask[ent.active_links].any()
+                ]
+                for key in stale:
+                    del progs[key]
+                self.stats.progs_pruned += len(stale)
+                self.stats.progs_kept += len(progs)
         self._topo_seen[net] = net.topology_version
 
+    def invalidate_network(self, net: NetworkGraph) -> None:
+        """Deprecated alias for :meth:`invalidate` with ``links=None``."""
+        warnings.warn(
+            "JRBAEngine.invalidate_network(net) is deprecated; use "
+            "JRBAEngine.invalidate(net) (links=None) — or invalidate(net, "
+            "links=mask) for footprint-scoped invalidation",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        self.invalidate(net)
+
     def _check_topology(self, net: NetworkGraph) -> None:
-        """Lazily drop caches whose topology epoch is stale."""
+        """Lazy safety net behind :meth:`invalidate`: drop caches whose
+        topology epoch is stale (a full drop — the touched-link mask is
+        unknown by the time the staleness is noticed)."""
         seen = self._topo_seen.get(net)
         if seen is None:
             self._topo_seen[net] = net.topology_version
         elif seen != net.topology_version:
-            self.invalidate_network(net)
+            self.invalidate(net)
 
     def candidate_links(self, net: NetworkGraph, flows: list[Flow]) -> np.ndarray:
         """Bool mask over links of every candidate path of ``flows`` — the
@@ -1220,9 +1282,20 @@ def jrba_batch(
     refine: bool = True,
     solver: str = "auto",
 ) -> list[JRBAResult | None]:
-    """Batched Algorithm 2 over N independent instances (one-shot convenience
-    around :class:`JRBAEngine`; reuse an engine across calls to keep its
-    compilation cache warm)."""
+    """Deprecated: use :meth:`JRBAEngine.solve_many`.
+
+    This wrapper predates the engine and builds a throwaway
+    :class:`JRBAEngine` per call, so it never reuses the compilation, path,
+    or program-tensor caches — every property the engine exists to provide.
+    It survives one release as an alias; batched callers should hold an
+    engine and call ``engine.solve_many(net, flow_sets, ...)``."""
+    warnings.warn(
+        "jrba_batch is deprecated: construct a JRBAEngine and call "
+        "solve_many (jrba_batch builds a fresh engine per call and skips "
+        "every cache)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     eng = JRBAEngine(k=k, n_iters=n_iters, solver=solver)
     return eng.solve_many(
         net,

@@ -19,11 +19,16 @@ paper's waiting-time experiments attribute queue delay to exactly this.
 
 Besides arrivals and completions the event loop understands a third event
 kind, ``"network"``: a churn step (``core.scenarios.ChurnStep``) that drifts
-link capacities and fails/recovers links or nodes mid-simulation. The
-handler invalidates candidate-path caches and speculations, re-routes and
-re-solves the running jobs the step touched (OTFS: per-job on residual;
-OTFA: the usual all-flows refresh; LR/BR/TP: equal-share recompute), and
-runs a scheduling round so recoveries re-admit queued jobs.
+link capacities and fails/recovers links or nodes mid-simulation. Inputs
+arrive as one :class:`EventTrace` (arrivals + churn merged into a single
+time-ordered stream; the old ``network_events=`` kwarg survives as a
+deprecated shim). The handler invalidates exactly the state a step touched
+— engine caches and speculations are pruned by *footprint* (the touched-link
+mask from ``apply_churn_step`` intersected with each entry's recorded link
+dependencies) rather than dropped wholesale — then re-routes and re-solves
+the running jobs the step affected (OTFS: speculate-then-repair in one
+batched dispatch; OTFA: the usual all-flows refresh; LR/BR/TP: equal-share
+recompute), and runs a scheduling round so recoveries re-admit queued jobs.
 """
 from __future__ import annotations
 
@@ -31,6 +36,7 @@ import dataclasses
 import heapq
 import math
 import time
+import warnings
 from typing import Generator, Sequence
 
 import numpy as np
@@ -49,6 +55,7 @@ from .paths import path_links
 from .scenarios import ChurnStep, apply_churn_step
 
 __all__ = [
+    "EventTrace",
     "JobRecord",
     "RoundRequest",
     "SimResult",
@@ -58,6 +65,45 @@ __all__ = [
 ]
 
 POLICIES = ("LR", "BR", "TP", "OTFS", "OTFA", "OTFS+WF", "OTFA+WF")
+
+Arrival = tuple[float, "JobGraph", float]  # (time, job, total_units)
+
+
+@dataclasses.dataclass
+class EventTrace:
+    """The full input timeline of one simulation: job arrivals plus the
+    optional churn trace, merged by :meth:`OnlineScheduler.step` into one
+    time-ordered event stream. A plain arrival list is still accepted
+    everywhere an ``EventTrace`` is (it coerces to a churn-free trace);
+    the legacy ``network_events=`` kwarg is a deprecated shim for
+    ``EventTrace(arrivals, churn=...)``. Future event kinds (e.g. job
+    migrations) extend this container rather than adding more parallel
+    kwargs."""
+
+    arrivals: list[Arrival]
+    churn: Sequence[ChurnStep] | None = None
+
+
+def _coerce_events(
+    events: EventTrace | list[Arrival],
+    network_events: Sequence[ChurnStep] | None,
+    *,
+    stacklevel: int = 3,
+) -> EventTrace:
+    """Normalize ``run``/``step`` input to an :class:`EventTrace`."""
+    if isinstance(events, EventTrace):
+        if network_events is not None:
+            raise TypeError(
+                "pass churn via EventTrace.churn, not the network_events= kwarg"
+            )
+        return events
+    if network_events is not None:
+        warnings.warn(
+            "network_events= is deprecated; pass EventTrace(arrivals, churn=...)",
+            DeprecationWarning,
+            stacklevel=stacklevel,
+        )
+    return EventTrace(list(events), churn=network_events)
 
 
 @dataclasses.dataclass
@@ -116,11 +162,40 @@ class SimResult:
     churn_resolves: int = 0
     churn_reroutes: int = 0
     churn_stalls: int = 0
+    # footprint-scoped invalidation accounting: queued-job speculations that
+    # outlived a churn step because the step's touched-link mask missed their
+    # footprint, vs. ones the step killed; and the speculate-then-repair
+    # outcome of batched churn re-solves (accepted = round-start solution
+    # committed verbatim, repaired = conflict forced an exact re-solve)
+    churn_spec_survived: int = 0
+    churn_spec_dropped: int = 0
+    churn_spec_accepted: int = 0
+    churn_spec_repaired: int = 0
+    # dispatch-collapse accounting on WIDE churn steps (>= 4 affected running
+    # jobs): total affected jobs re-solved across wide steps, and the
+    # RoundRequest dispatches those re-solves actually cost. Sequential
+    # re-solving pins the ratio at 1.0; batched speculation pushes it toward
+    # len(affected) per step.
+    churn_wide_jobs: int = 0
+    churn_wide_dispatches: int = 0
 
     @property
     def spec_accept_rate(self) -> float:
         tried = self.spec_accepted + self.spec_repaired
         return self.spec_accepted / tried if tried else 0.0
+
+    @property
+    def churn_spec_accept_rate(self) -> float:
+        tried = self.churn_spec_accepted + self.churn_spec_repaired
+        return self.churn_spec_accepted / tried if tried else 0.0
+
+    @property
+    def churn_dispatch_collapse(self) -> float:
+        """Jobs re-solved per dispatch on wide churn steps (>= 1; higher is
+        better; 0.0 when no wide step occurred)."""
+        if not self.churn_wide_dispatches:
+            return 0.0
+        return self.churn_wide_jobs / self.churn_wide_dispatches
 
     @property
     def n_scheduled(self) -> int:
@@ -196,6 +271,21 @@ class _Speculation:
     mem_after: np.ndarray  # net.mem_avail after it (== before if infeasible)
     result: JRBAResult | None = None
     capacity0: np.ndarray | None = None  # residual snapshot it solved against
+    # link ids whose capacity the allocation read through avg_path_bandwidth
+    # (the pinned-path trace): together with result.candidate_links this is
+    # the speculation's full churn footprint — a capacity change strictly
+    # outside it provably cannot alter either the Algorithm-1 replay or the
+    # recorded JRBA solution
+    alloc_footprint: frozenset[int] = frozenset()
+
+    def footprint_hit(self, touched: np.ndarray) -> bool:
+        """Does a churn step's touched-link mask intersect this speculation's
+        recorded dependency footprint?"""
+        if any(touched[l] for l in self.alloc_footprint):
+            return True
+        return self.result is not None and bool(
+            np.any(self.result.candidate_links & touched)
+        )
 
 
 def _same_flows(a: list[Flow], b: list[Flow]) -> bool:
@@ -222,6 +312,7 @@ class OnlineScheduler:
         max_acceptable_span: float = 1e4,
         engine: JRBAEngine | None = None,
         speculate: bool = True,
+        scoped_churn: bool = True,
         solver: str = "auto",
     ) -> None:
         if policy not in POLICIES:
@@ -236,6 +327,14 @@ class OnlineScheduler:
         # Admission outcomes are exactly the sequential ones (see
         # schedule_round); False forces one solve per waiting job.
         self.speculate = speculate
+        # footprint-scoped churn invalidation: a churn step prunes only the
+        # speculations and engine cache entries whose recorded link footprint
+        # the step's touched mask intersects (and prunes nothing on pure
+        # capacity drift outside every footprint). False restores the
+        # reference behaviour — every effective step drops all speculations
+        # and any topology change fully invalidates the engine — which is
+        # what the scoped path must reproduce record-for-record.
+        self.scoped_churn = scoped_churn
         # shared engines keep compiled shape buckets + path caches warm across
         # schedulers (a fleet of simulations pays compile cost once); a passed
         # engine is authoritative, so k_paths/jrba_iters (and the solver
@@ -253,10 +352,26 @@ class OnlineScheduler:
             return allocate_whole_job_br(self.net, job, job_id=job_id)
         return allocate_greedy(self.net, job, job_id=job_id)  # TP / OTFS / OTFA
 
+    def _allocate_traced(
+        self, job: JobGraph, job_id: int
+    ) -> tuple[Allocation, list[Flow], frozenset[int]]:
+        """Run :meth:`_allocate` with the avg-bandwidth trace hook armed,
+        returning the link ids whose live capacity the allocator read (the
+        pinned shortest-path links of every ``avg_path_bandwidth`` query it
+        made). That set is the allocation's exact capacity dependency: churn
+        strictly outside it leaves a replayed allocation bit-identical."""
+        trace: set[int] = set()
+        self.net._avg_bw_trace = trace
+        try:
+            alloc, flows = self._allocate(job, job_id)
+        finally:
+            self.net._avg_bw_trace = None
+        return alloc, flows, frozenset(trace)
+
     # -- simulation -----------------------------------------------------------
     def run(
         self,
-        arrivals: list[tuple[float, JobGraph, float]],  # (time, job, total_units)
+        events: EventTrace | list[Arrival],
         *,
         max_time: float = 1e6,
         network_events: Sequence[ChurnStep] | None = None,
@@ -265,8 +380,12 @@ class OnlineScheduler:
         :class:`RoundRequest` inline through the scheduler's own engine.
         Singleton rounds go through the scalar ``solve`` path — byte-for-byte
         the pre-stepper behaviour — while speculative multi-solve rounds go
-        through one ``solve_many`` dispatch (the intra-round batching win)."""
-        stepper = self.step(arrivals, max_time=max_time, network_events=network_events)
+        through one ``solve_many`` dispatch (the intra-round batching win).
+
+        ``events`` is an :class:`EventTrace` (or a bare arrival list, which
+        coerces to a churn-free trace); ``network_events=`` is a deprecated
+        shim for ``EventTrace(arrivals, churn=...)``."""
+        stepper = self.step(_coerce_events(events, network_events), max_time=max_time)
         try:
             req = next(stepper)
             while True:
@@ -294,7 +413,7 @@ class OnlineScheduler:
 
     def step(
         self,
-        arrivals: list[tuple[float, JobGraph, float]],  # (time, job, total_units)
+        events: EventTrace | list[Arrival],
         *,
         max_time: float = 1e6,
         network_events: Sequence[ChurnStep] | None = None,
@@ -307,15 +426,21 @@ class OnlineScheduler:
         co-schedules: N steppers advanced in lockstep flatten their rounds'
         solves through one compiled call.
 
-        ``network_events`` is a churn trace (see ``core.scenarios``): each
-        :class:`ChurnStep` becomes a third event kind ``"network"`` that
-        mutates the network in place, invalidates candidate-path caches and
-        speculations, re-routes + re-solves affected running jobs, and runs
-        a scheduling round (recoveries re-admit jobs the degraded network
-        rejected). The topology is restored to its construction state first,
-        so re-running the same (net, trace) pair is reproducible."""
+        ``events`` is an :class:`EventTrace`; its ``churn`` is a churn trace
+        (see ``core.scenarios``): each :class:`ChurnStep` becomes a third
+        event kind ``"network"`` that mutates the network in place, prunes
+        candidate-path caches and speculations by footprint (or wholesale
+        when a recovery adds links, or under ``scoped_churn=False``),
+        re-routes + re-solves affected running jobs, and runs a scheduling
+        round (recoveries re-admit jobs the degraded network rejected). The
+        topology is restored to its construction state first, so re-running
+        the same (net, trace) pair is reproducible. A bare arrival list
+        coerces to a churn-free trace; ``network_events=`` is a deprecated
+        shim for ``EventTrace(arrivals, churn=...)``."""
+        trace = _coerce_events(events, network_events)
+        arrivals = trace.arrivals
         net = self.net
-        churn_steps = list(network_events or [])
+        churn_steps = list(trace.churn or [])
         if churn_steps:
             net.restore_topology()
         net.reset_residual()
@@ -337,6 +462,9 @@ class OnlineScheduler:
         n_dispatches = n_solves = 0
         spec_rounds = spec_accepted = spec_repaired = 0
         churn_events = churn_resolves = churn_reroutes = churn_stalls = 0
+        churn_spec_survived = churn_spec_dropped = 0
+        churn_spec_accepted = churn_spec_repaired = 0
+        churn_wide_jobs = churn_wide_dispatches = 0
 
         def solve_round(reqs: list[SolveRequest]):
             """Sub-generator wrapping every driver suspension: yields one
@@ -379,6 +507,30 @@ class OnlineScheduler:
                     for l in path_links(net, route):
                         net.residual[l] = max(net.residual[l] - b, 0.0)
 
+        def commit_reroute(r: JobRecord, res: JRBAResult, now: float) -> None:
+            """Commit one churn re-solve: accept the new routes/bandwidths if
+            the span clears the admission bar, else stall the job (zero
+            bandwidth, infinite span, memory held) until a later recovery or
+            finish event re-solves it."""
+            nonlocal churn_reroutes, churn_stalls
+            old_routes = r.routes
+            span = job_span(net, r.alloc, r.flows, res.bandwidth)
+            if np.isfinite(span) and span <= self.max_acceptable_span:
+                r.bandwidths, r.routes, r.span = res.bandwidth, res.routes, span
+                if r.routes != old_routes:
+                    churn_reroutes += 1
+                net.residual = np.maximum(net.residual - res.link_load, 0.0)
+                set_finish_event(r, now)
+            else:
+                # same acceptability bar as admission: committing a
+                # degenerate span would pin near-zero progress (and its
+                # link claim) past the simulation horizon
+                churn_stalls += 1
+                r.bandwidths = np.zeros(len(r.flows))
+                r.routes = res.routes
+                r.span = float("inf")
+                set_finish_event(r, now)  # invalidates any queued event
+
         def churn_reroute(affected: list[JobRecord], now: float):
             """OTFS response to a churn step: rebuild the residual from the
             unaffected running jobs' committed loads on the NEW capacities,
@@ -386,36 +538,100 @@ class OnlineScheduler:
             order (earliest ``schedule_time`` first — deterministic, and the
             job that has held its allocation longest keeps first claim). A
             re-solve re-routes over fresh candidate paths (the engine's path
-            cache was invalidated if the topology changed) and re-commits the
-            new link load; a job whose flows can no longer be usefully routed
+            cache was pruned if the topology changed) and re-commits the new
+            link load; a job whose flows can no longer be usefully routed
             — endpoints partitioned by failures, or only a degenerate near-
             zero-bandwidth route left on an exhausted residual — stalls with
             zero bandwidth and an infinite span, holding its memory but no
-            links, until a later recovery or finish event re-solves it."""
-            nonlocal churn_resolves, churn_reroutes, churn_stalls
+            links, until a later recovery or finish event re-solves it.
+
+            With ``speculate`` a multi-job step collapses the N sequential
+            dispatches into (ideally) one: every affected job is solved
+            against the step-start residual snapshot in a single batched
+            dispatch, then committed in admission order with the same accept
+            check the scheduling round uses — a solution is kept verbatim iff
+            the live residual still clamp-equals its snapshot on the
+            program's candidate links (the solver's exact dependency set) and
+            its link load fits. A conflicting job re-solves on the live
+            residual, riding one dispatch with a re-speculation of every
+            remaining stale job, so conflicts degrade gracefully instead of
+            going sequential. The committed records are provably the
+            sequential ones."""
+            nonlocal churn_resolves, churn_spec_accepted, churn_spec_repaired
+            nonlocal churn_wide_jobs, churn_wide_dispatches
             rebuild_residual_from_running(exclude=affected)
-            for r in sorted(affected, key=lambda j: (j.schedule_time, j.job_id)):
-                (res,) = yield from solve_round(
-                    [SolveRequest(net, r.flows, net.residual.copy(), self.water_fill)]
+            order = sorted(affected, key=lambda j: (j.schedule_time, j.job_id))
+            wide = len(order) >= 4
+            dispatches0 = n_dispatches
+            if not (self.speculate and self.base == "OTFS" and len(order) > 1):
+                # sequential reference path: one dispatch per affected job
+                for r in order:
+                    (res,) = yield from solve_round(
+                        [SolveRequest(net, r.flows, net.residual.copy(), self.water_fill)]
+                    )
+                    churn_resolves += 1
+                    commit_reroute(r, res, now)
+                if wide:
+                    churn_wide_jobs += len(order)
+                    churn_wide_dispatches += n_dispatches - dispatches0
+                return
+            cap0 = net.residual.copy()
+            results = yield from solve_round(
+                [SolveRequest(net, r.flows, cap0, self.water_fill) for r in order]
+            )
+            spec: dict[int, tuple[JRBAResult, np.ndarray]] = {
+                r.job_id: (res, cap0) for r, res in zip(order, results)
+            }
+
+            def entry_exact(entry: tuple[JRBAResult, np.ndarray]) -> bool:
+                # the spec_exact clamp-equality criterion on the churn
+                # snapshots: build_program clamps capacity at 1e-9, so a
+                # residual that clamp-equals the snapshot on the candidate
+                # links yields a bit-identical program (hence a bit-identical
+                # solution). No link_load_fits guard here — the sequential
+                # churn path commits its re-solves unconditionally (clamped
+                # residual subtraction), so an unconverged solution that
+                # slightly overcommits would be re-produced verbatim by the
+                # repair solve and committed anyway; the guard would only
+                # burn a dispatch to arrive at the same record.
+                res, cap = entry
+                mask = res.candidate_links
+                return bool(
+                    np.array_equal(
+                        np.maximum(net.residual[mask], 1e-9),
+                        np.maximum(cap[mask], 1e-9),
+                    )
                 )
-                churn_resolves += 1
-                old_routes = r.routes
-                span = job_span(net, r.alloc, r.flows, res.bandwidth)
-                if np.isfinite(span) and span <= self.max_acceptable_span:
-                    r.bandwidths, r.routes, r.span = res.bandwidth, res.routes, span
-                    if r.routes != old_routes:
-                        churn_reroutes += 1
-                    net.residual = np.maximum(net.residual - res.link_load, 0.0)
-                    set_finish_event(r, now)
+
+            for i, r in enumerate(order):
+                res = spec[r.job_id][0]
+                if entry_exact(spec[r.job_id]):
+                    churn_spec_accepted += 1
                 else:
-                    # same acceptability bar as admission: committing a
-                    # degenerate span would pin near-zero progress (and its
-                    # link claim) past the simulation horizon
-                    churn_stalls += 1
-                    r.bandwidths = np.zeros(len(r.flows))
-                    r.routes = res.routes
-                    r.span = float("inf")
-                    set_finish_event(r, now)  # invalidates any queued event
+                    # conflict: an earlier commit moved the residual on this
+                    # job's candidate links. Re-solve it on the live residual
+                    # and re-speculate EVERY remaining stale job against the
+                    # same snapshot in the one dispatch — churn re-solves
+                    # always commit (unlike admissions), so the overlap
+                    # filter schedule_round uses would only delay the
+                    # inevitable re-solve here.
+                    capR = net.residual.copy()
+                    rest = [
+                        rr for rr in order[i + 1 :] if not entry_exact(spec[rr.job_id])
+                    ]
+                    repair = yield from solve_round(
+                        [SolveRequest(net, r.flows, capR, self.water_fill)]
+                        + [SolveRequest(net, rr.flows, capR, self.water_fill) for rr in rest]
+                    )
+                    res = repair[0]
+                    for rr, rr_res in zip(rest, repair[1:]):
+                        spec[rr.job_id] = (rr_res, capR)
+                    churn_spec_repaired += 1
+                churn_resolves += 1
+                commit_reroute(r, res, now)
+            if wide:
+                churn_wide_jobs += len(order)
+                churn_wide_dispatches += n_dispatches - dispatches0
 
         def refresh_equal_share(now: float) -> None:
             """LR/BR/TP: global equal-share refresh of all active flows."""
@@ -493,8 +709,10 @@ class OnlineScheduler:
                 ):
                     continue  # carried over from an earlier round, still exact
                 net.mem_avail = mem0.copy()
-                alloc, flows = self._allocate(r.job, r.job_id)
-                sp = _Speculation(alloc, flows, mem0, net.mem_avail.copy())
+                alloc, flows, footprint = self._allocate_traced(r.job, r.job_id)
+                sp = _Speculation(
+                    alloc, flows, mem0, net.mem_avail.copy(), alloc_footprint=footprint
+                )
                 spec_memo[r.job_id] = sp
                 if not sp.alloc.feasible:
                     continue
@@ -571,12 +789,16 @@ class OnlineScheduler:
                 if sp is not None and np.array_equal(net.mem_avail, sp.mem_before):
                     # memory state matches the speculative pass; Algorithm 1
                     # is deterministic in it, so replay the recorded result
-                    alloc, flows = sp.alloc, sp.flows
+                    alloc, flows, footprint = sp.alloc, sp.flows, sp.alloc_footprint
                     net.mem_avail = sp.mem_after.copy()
                     flows_ok = True
                 else:
                     t0 = time.perf_counter()
-                    alloc, flows = self._allocate(r.job, r.job_id)
+                    if self.speculate and self.base == "OTFS":
+                        alloc, flows, footprint = self._allocate_traced(r.job, r.job_id)
+                    else:
+                        alloc, flows = self._allocate(r.job, r.job_id)
+                        footprint = frozenset()
                     sched_overhead += time.perf_counter() - t0
                     flows_ok = sp is not None and _same_flows(flows, sp.flows)
                 if not alloc.feasible:
@@ -631,6 +853,7 @@ class OnlineScheduler:
                                 net.mem_avail.copy(),
                                 res,
                                 capR,
+                                alloc_footprint=footprint,
                             )
                     bandwidths = np.zeros(0) if res is None else res.bandwidth
                     span = job_span(net, alloc, flows, bandwidths)
@@ -670,22 +893,45 @@ class OnlineScheduler:
             n_events += 1
             if kind == "network":
                 advance_running(now)
-                touched, topo_changed = apply_churn_step(net, churn_steps[jid])
+                effect = apply_churn_step(net, churn_steps[jid])
+                touched, topo_changed = effect.touched, effect.topo_changed
                 churn_events += 1
                 if not topo_changed and not np.any(touched):
                     continue  # every op was a no-op; nothing to refresh
-                if topo_changed:
-                    # candidate paths may route over dead links or miss
-                    # recovered ones — drop the engine's per-net path and
-                    # program-tensor caches (capacity drift alone keeps them:
-                    # the program-cache hit path refreshes only capacity)
-                    self.engine.invalidate_network(net)
-                # drop ALL speculations, not just footprint-touched ones: a
-                # speculation also records an Algorithm-1 allocation, and the
-                # allocator's avg-path-bandwidth view shifts under any
-                # capacity change — replaying a pre-churn allocation would
-                # diverge from what a fresh sequential round computes
-                spec_memo.clear()
+                if not self.scoped_churn or effect.links_added:
+                    # reference mode — or a recovery added links, which can
+                    # create shorter paths between ANY node pair: every
+                    # cached enumeration and speculation is suspect, so drop
+                    # them all (recover_link already cleared the avg-bw path
+                    # memo wholesale for the same reason)
+                    if topo_changed:
+                        self.engine.invalidate(net)
+                    churn_spec_dropped += len(spec_memo)
+                    spec_memo.clear()
+                else:
+                    # footprint-scoped invalidation: failures only ever
+                    # REMOVE paths, so pruning exactly the engine entries
+                    # whose link footprint crosses a touched link preserves
+                    # every surviving Yen enumeration; pure capacity drift
+                    # keeps even those (the program-cache hit path refreshes
+                    # capacity, and the avg-bw memo pins paths and reads
+                    # capacity live). A speculation survives iff the step
+                    # missed both its allocation's avg-bw footprint (so the
+                    # Algorithm-1 replay stays exact) and its solution's
+                    # candidate links (so the recorded solve stays exact —
+                    # residual-level staleness is still caught at use time
+                    # by spec_exact).
+                    if topo_changed:
+                        self.engine.invalidate(net, links=touched)
+                    stale_ids = [
+                        job_id
+                        for job_id, sp in spec_memo.items()
+                        if sp.footprint_hit(touched)
+                    ]
+                    for job_id in stale_ids:
+                        del spec_memo[job_id]
+                    churn_spec_dropped += len(stale_ids)
+                    churn_spec_survived += len(spec_memo)
                 if self.base == "OTFS":
                     affected = []
                     for r in q_run:
@@ -770,4 +1016,10 @@ class OnlineScheduler:
             churn_resolves=churn_resolves,
             churn_reroutes=churn_reroutes,
             churn_stalls=churn_stalls,
+            churn_spec_survived=churn_spec_survived,
+            churn_spec_dropped=churn_spec_dropped,
+            churn_spec_accepted=churn_spec_accepted,
+            churn_spec_repaired=churn_spec_repaired,
+            churn_wide_jobs=churn_wide_jobs,
+            churn_wide_dispatches=churn_wide_dispatches,
         )

@@ -19,6 +19,7 @@ __all__ = [
     "k_shortest_paths",
     "path_link_index",
     "path_links",
+    "avg_bw_path_links",
     "avg_path_bandwidth",
 ]
 
@@ -145,28 +146,72 @@ def path_link_index(
     return idx
 
 
-def avg_path_bandwidth(net: NetworkGraph, src: int, dst: int) -> float:
-    """Average bandwidth along the shortest path (Algo 1, line 7 note: 'we set
-    the bandwidth between two edge nodes as the average bandwidth of all
-    routing links'). Infinite for colocated endpoints.
+_MISSING = object()
 
-    Memoized per network: the value depends only on static topology and
-    bandwidth (never on residual capacity or free memory), and Algorithm 1
-    queries it for every candidate node of every task — uncached it is the
-    online scheduler's hottest host-side path."""
+
+def avg_bw_path_links(net: NetworkGraph, src: int, dst: int) -> tuple[int, ...] | None:
+    """The link-id footprint of one avg-bandwidth query: the pinned shortest
+    path between ``src`` and ``dst``, enumerated on first query and kept for
+    the rest of the topology epoch (see :func:`avg_path_bandwidth`). Returns
+    ``None`` for a disconnected pair and ``()`` for colocated endpoints."""
     if src == dst:
-        return float("inf")
+        return ()
     cache = getattr(net, "_avg_bw_cache", None)
     if cache is None:
         cache = net._avg_bw_cache = {}
-    hit = cache.get((src, dst))
-    if hit is not None:
-        return hit
-    path = dijkstra(net, src, dst)
-    if path is None:
-        bw = 0.0
-    else:
-        bws = [net.capacity[l] for l in path_links(net, path)]
-        bw = float(sum(bws) / len(bws))
-    cache[(src, dst)] = bw
-    return bw
+    links = cache.get((src, dst), _MISSING)
+    if links is _MISSING:
+        path = dijkstra(net, src, dst)
+        links = None if path is None else tuple(path_links(net, path))
+        cache[(src, dst)] = links
+    return links
+
+
+def avg_path_bandwidth(net: NetworkGraph, src: int, dst: int) -> float:
+    """Average bandwidth along the shortest path (Algo 1, line 7 note: 'we set
+    the bandwidth between two edge nodes as the average bandwidth of all
+    routing links'). Infinite for colocated endpoints, 0 for disconnected.
+
+    Memoized per network, with footprint-scoped invalidation: the memo pins
+    the shortest *path* (its link-id tuple) per (src, dst) for one topology
+    epoch, and the value reads through to the live capacities of those links
+    on every call. Capacity drift therefore never clears the memo — drifted
+    links feed the next query automatically — while a link failure prunes
+    exactly the pairs whose pinned path crossed the dead link and a recovery
+    (which can create shorter paths anywhere) clears it wholesale (see
+    ``NetworkGraph``'s churn API). The pinned path is the tie-break choice
+    made at first query within the epoch: a later capacity drift on *other*
+    equal-hop paths does not re-run the tie-break, which is what makes the
+    value a pure function of (topology epoch, capacities on the pinned path)
+    — the invariant footprint-scoped speculation invalidation relies on.
+
+    Algorithm 1 queries this for every candidate node of every task —
+    uncached it is the online scheduler's hottest host-side path. When
+    ``net._avg_bw_trace`` is a set, every query adds its pinned-path link ids
+    to it (the hook ``OnlineScheduler`` uses to record an allocation's
+    avg-bandwidth dependency footprint)."""
+    links = avg_bw_path_links(net, src, dst)
+    if links == ():
+        return float("inf")
+    trace = getattr(net, "_avg_bw_trace", None)
+    if trace is not None and links:
+        trace.update(links)
+    if links is None:
+        return 0.0
+    # derived-value memo keyed on the capacity epoch: repeat queries (the
+    # common case — Algorithm 1 re-scores the same pairs for every waiting
+    # job every round) are one dict hit, while any capacity mutation bumps
+    # ``capacity_version`` and lazily re-derives only the pairs re-queried.
+    # Every event that can change a pinned path (failure/recovery/restore)
+    # also bumps the version, so a stored value can never outlive its path.
+    version = net.capacity_version
+    values = getattr(net, "_avg_bw_values", None)
+    if values is None:
+        values = net._avg_bw_values = {}
+    hit = values.get((src, dst))
+    if hit is not None and hit[0] == version:
+        return hit[1]
+    cap = net.capacity
+    value = float(sum(cap[l] for l in links) / len(links))
+    values[(src, dst)] = (version, value)
+    return value

@@ -28,7 +28,7 @@ network to a fully-connected state and stalled jobs can finish.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import numpy as np
 
@@ -36,6 +36,7 @@ from .graph import Flow, JobGraph, NetworkGraph, random_edge_network
 from .workloads import poisson_arrivals, poisson_burst_arrivals
 
 __all__ = [
+    "ChurnEffect",
     "ChurnOp",
     "ChurnStep",
     "Scenario",
@@ -83,14 +84,27 @@ class ChurnStep:
     ops: tuple[ChurnOp, ...]
 
 
-def apply_churn_step(net: NetworkGraph, step: ChurnStep) -> tuple[np.ndarray, bool]:
-    """Apply one step to ``net`` in place. Returns ``(touched, topo_changed)``:
-    a bool mask over link ids whose capacity or liveness actually changed,
-    and whether the adjacency (and with it every candidate-path cache)
-    changed. No-op ops (failing a dead link, drifting to the same value)
-    touch nothing."""
+class ChurnEffect(NamedTuple):
+    """What one :func:`apply_churn_step` call actually did — the input to
+    footprint-scoped invalidation. ``touched`` is a bool mask over link ids
+    whose capacity or liveness changed; ``topo_changed`` says the adjacency
+    (and with it candidate-path enumerations crossing the touched links)
+    changed; ``links_added`` says the adjacency *gained* links (a recovery),
+    which is the one case scoped invalidation cannot bound — a new link can
+    create a shorter path between any pair, so caches must drop wholesale."""
+
+    touched: np.ndarray
+    topo_changed: bool
+    links_added: bool
+
+
+def apply_churn_step(net: NetworkGraph, step: ChurnStep) -> ChurnEffect:
+    """Apply one step to ``net`` in place. Returns a :class:`ChurnEffect`
+    describing which links were actually touched and how. No-op ops (failing
+    a dead link, drifting to the same value) touch nothing."""
     touched = np.zeros(len(net.links), dtype=bool)
     topo_changed = False
+    links_added = False
     for op in step.ops:
         if op.kind == "capacity":
             u, v = op.link
@@ -109,6 +123,7 @@ def apply_churn_step(net: NetworkGraph, step: ChurnStep) -> tuple[np.ndarray, bo
             if net.recover_link(u, v, capacity=op.capacity):
                 touched[net.link_id(u, v)] = True
                 topo_changed = True
+                links_added = True
         elif op.kind == "fail_node":
             ids = net.fail_node(op.node)
             touched[ids] = True
@@ -117,9 +132,10 @@ def apply_churn_step(net: NetworkGraph, step: ChurnStep) -> tuple[np.ndarray, bo
             ids = net.recover_node(op.node)
             touched[ids] = True
             topo_changed = topo_changed or bool(ids)
+            links_added = links_added or bool(ids)
         else:
             raise ValueError(f"unknown churn op kind {op.kind!r}")
-    return touched, topo_changed
+    return ChurnEffect(touched, topo_changed, links_added)
 
 
 def capacity_drift_trace(
@@ -508,6 +524,34 @@ SCENARIOS: dict[str, Scenario] = {
             "intra-round speculative-batching regime)",
             lambda rng: random_edge_network(14, mean_bandwidth=1.0, rng=rng),
             _bursty(lam_burst=6.0),
+        ),
+        Scenario(
+            "edge-mesh-flash-churn",
+            "the adversarial composition for churn-resilient speculation: a "
+            "sustained MMPP flash crowd (deep waiting queues, the regime "
+            "where intra-round batching pays) on a wide mesh whose links "
+            "drift, dip, and fail under the running jobs — every churn step "
+            "both re-solves affected running jobs and stresses which queued "
+            "speculations the footprint-scoped invalidation can keep. The "
+            "mesh is larger (32 nodes, degree ~4) and the per-step churn "
+            "sparser than the default trace so that concurrent jobs' link "
+            "footprints are only partially overlapping: wide drift steps "
+            "touch many jobs at once without every commit invalidating the "
+            "next job's speculation (total overlap pins the batched re-solve "
+            "at sequential cost; zero overlap measures nothing). Node "
+            "failures are left out: whole-node outages stall pinned sources "
+            "for long stretches and drown the capacity-churn signal this "
+            "scenario exists to measure.",
+            lambda rng: random_edge_network(
+                32, avg_degree=4.0, mean_bandwidth=1.0, rng=rng
+            ),
+            _bursty(lam_burst=10.0),
+            make_churn=lambda net, rng, t_end: sorted(
+                capacity_drift_trace(net, rng, t_end=t_end, frac=0.08)
+                + link_failure_trace(net, rng, t_end=t_end)
+                + mmpp_dip_trace(net, rng, t_end=t_end, subset_frac=0.1),
+                key=lambda s: s.time,
+            ),
         ),
         Scenario(
             "edge-cloud",

@@ -27,7 +27,7 @@ from typing import Generator
 
 from ..core.graph import JobGraph
 from ..core.jrba import JRBAEngine
-from ..core.online import OnlineScheduler, RoundRequest, SimResult
+from ..core.online import EventTrace, OnlineScheduler, RoundRequest, SimResult
 from ..core.scenarios import SCENARIOS, ChurnStep
 from .telemetry import FleetTelemetry, RoundRecord
 
@@ -60,6 +60,12 @@ class FleetSim:
     name: str = ""
     max_time: float = 1e6
     network_events: list[ChurnStep] | None = None
+
+    @property
+    def events(self) -> EventTrace:
+        """The lane's input timeline in the form :meth:`OnlineScheduler.step`
+        takes (arrivals + churn merged into one :class:`EventTrace`)."""
+        return EventTrace(self.arrivals, churn=self.network_events)
 
 
 def build_scenario_fleet(
@@ -152,12 +158,7 @@ class FleetRuntime:
         solver0 = dataclasses.asdict(engine.stats)
         t_start = time.perf_counter()
         lanes = [
-            _Lane(
-                sim=s,
-                gen=s.scheduler.step(
-                    s.arrivals, max_time=s.max_time, network_events=s.network_events
-                ),
-            )
+            _Lane(sim=s, gen=s.scheduler.step(s.events, max_time=s.max_time))
             for s in sims
         ]
         for lane in lanes:  # prime: advance to the first solve (or completion)

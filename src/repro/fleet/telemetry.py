@@ -107,14 +107,22 @@ class FleetTelemetry:
             # network churn across the fleet: "network" events applied,
             # running jobs re-solved because a churn step touched their
             # footprint, re-solves that changed the route set, and re-solves
-            # that left a job stalled until a later recovery; None when no
-            # lane carried a churn trace
+            # that left a job stalled until a later recovery; spec_survived /
+            # spec_dropped count queued-job speculations that outlived vs
+            # died at churn steps (footprint-scoped invalidation), and
+            # spec_accepted / spec_repaired the speculate-then-repair outcome
+            # of batched churn re-solves. None when no lane carried a churn
+            # trace.
             "churn": (
                 {
                     "events": churn_events,
                     "resolves": sum(r.churn_resolves for r in results),
                     "reroutes": sum(r.churn_reroutes for r in results),
                     "stalls": sum(r.churn_stalls for r in results),
+                    "spec_survived": sum(r.churn_spec_survived for r in results),
+                    "spec_dropped": sum(r.churn_spec_dropped for r in results),
+                    "spec_accepted": sum(r.churn_spec_accepted for r in results),
+                    "spec_repaired": sum(r.churn_spec_repaired for r in results),
                 }
                 if churn_events
                 else None

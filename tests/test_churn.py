@@ -8,6 +8,7 @@ import pytest
 from repro.core import (
     ChurnOp,
     ChurnStep,
+    EventTrace,
     Flow,
     JobGraph,
     JRBAEngine,
@@ -119,14 +120,19 @@ def test_apply_churn_step_touched_mask():
             ChurnOp("fail", link=(2, 3)),
         ),
     )
-    touched, topo = apply_churn_step(net, step)
-    assert topo
-    assert touched[net.link_id(0, 1)]
-    assert not touched[net.link_id(1, 2)]
-    assert touched[net.link_id(2, 3)]
+    effect = apply_churn_step(net, step)
+    assert effect.topo_changed and not effect.links_added
+    assert effect.touched[net.link_id(0, 1)]
+    assert not effect.touched[net.link_id(1, 2)]
+    assert effect.touched[net.link_id(2, 3)]
+    # a recovery that actually revives a link reports links_added
+    back = apply_churn_step(net, ChurnStep(1.5, (ChurnOp("recover", link=(2, 3)),)))
+    assert back.topo_changed and back.links_added
+    apply_churn_step(net, ChurnStep(1.8, (ChurnOp("fail", link=(2, 3)),)))
     # applying the failure again is a full no-op
-    touched2, topo2 = apply_churn_step(net, ChurnStep(2.0, (ChurnOp("fail", link=(2, 3)),)))
-    assert not topo2 and not touched2.any()
+    effect2 = apply_churn_step(net, ChurnStep(2.0, (ChurnOp("fail", link=(2, 3)),)))
+    assert not effect2.topo_changed and not effect2.touched.any()
+    assert not effect2.links_added
 
 
 # ---------------------------------------------------------------------------
@@ -234,7 +240,7 @@ def test_reroute_stall_and_recovery():
         ChurnStep(7.0, (ChurnOp("recover", link=(1, 2)),)),
     ]
     sched = OnlineScheduler(net, "OTFS", k_paths=2, jrba_iters=40)
-    res = sched.run(arrivals, network_events=churn)
+    res = sched.run(EventTrace(arrivals, churn=churn))
     r = res.records[0]
     assert res.unfinished == 0 and r.done
     assert res.churn_events == 4
@@ -261,7 +267,7 @@ def test_outage_delays_refresh_policies_too(policy):
         net = square_net()
         arrivals = [(0.0, one_flow_job(), 4.0)]
         return OnlineScheduler(net, policy, k_paths=2, jrba_iters=40).run(
-            arrivals, network_events=churn
+            EventTrace(arrivals, churn=churn)
         )
 
     outage = [
@@ -305,8 +311,8 @@ def test_restore_topology_invalidates_drift_era_path_caches():
     # (bw 4) instead of A (bw 5) at admission visibly shifts finish times
     arrivals = [(0.0, one_flow_job(workload=1.0), 8.0)]
     eng = JRBAEngine(k=1, n_iters=40)
-    a = OnlineScheduler(net, "OTFS", engine=eng).run(arrivals, network_events=churn)
-    b = OnlineScheduler(net, "OTFS", engine=eng).run(arrivals, network_events=churn)
+    a = OnlineScheduler(net, "OTFS", engine=eng).run(EventTrace(arrivals, churn=churn))
+    b = OnlineScheduler(net, "OTFS", engine=eng).run(EventTrace(arrivals, churn=churn))
     assert a.records[0].flows and records_equal(a, b)
 
 
@@ -320,7 +326,7 @@ def test_degraded_network_defers_admission():
     ]
     arrivals = [(1.0, one_flow_job(), 3.0)]
     res = OnlineScheduler(net, "OTFS", k_paths=2, jrba_iters=40).run(
-        arrivals, network_events=churn
+        EventTrace(arrivals, churn=churn)
     )
     r = res.records[0]
     assert res.unfinished == 0
@@ -333,7 +339,7 @@ def test_churn_scenario_all_jobs_finish(policy):
     net, arrivals, churn = get_scenario(CHURN_SCENARIO).build_churn(seed=0, n_jobs=5)
     assert churn, "churn scenario must carry a non-empty trace"
     sched = OnlineScheduler(net, policy, k_paths=3, jrba_iters=60)
-    res = sched.run(arrivals, network_events=churn)
+    res = sched.run(EventTrace(arrivals, churn=churn))
     assert res.unfinished == 0
     assert res.churn_events == len(churn)
     assert all(r.done for r in res.records)
@@ -345,10 +351,10 @@ def test_rerun_on_mutated_network_is_reproducible():
     sc = get_scenario(CHURN_SCENARIO)
     net, arrivals, churn = sc.build_churn(seed=1, n_jobs=4)
     eng = JRBAEngine(k=3, n_iters=60)
-    a = OnlineScheduler(net, "OTFS", engine=eng).run(arrivals, network_events=churn)
+    a = OnlineScheduler(net, "OTFS", engine=eng).run(EventTrace(arrivals, churn=churn))
     # second run on the SAME mutated net object: restore_topology + the
     # engine's topology-version check make it byte-identical
-    b = OnlineScheduler(net, "OTFS", engine=eng).run(arrivals, network_events=churn)
+    b = OnlineScheduler(net, "OTFS", engine=eng).run(EventTrace(arrivals, churn=churn))
     assert records_equal(a, b)
 
 
@@ -364,7 +370,7 @@ def test_dense_sparse_records_identical_under_churn():
             sched = OnlineScheduler(
                 net, "OTFS", k_paths=3, jrba_iters=80, solver=solver
             )
-            runs[solver] = sched.run(arrivals, network_events=churn)
+            runs[solver] = sched.run(EventTrace(arrivals, churn=churn))
         assert runs["dense"].n_scheduled == runs["auto"].n_scheduled
         assert records_equal(runs["dense"], runs["auto"])
         assert runs["dense"].churn_resolves == runs["auto"].churn_resolves
@@ -378,7 +384,7 @@ def test_speculation_preserves_sequential_semantics_under_churn():
         sched = OnlineScheduler(
             net, "OTFS", k_paths=3, jrba_iters=60, speculate=speculate
         )
-        runs[speculate] = sched.run(arrivals, network_events=churn)
+        runs[speculate] = sched.run(EventTrace(arrivals, churn=churn))
     assert records_equal(runs[False], runs[True])
 
 
@@ -408,7 +414,7 @@ def test_fleet_runtime_carries_churn_lanes(tmp_path):
 
     solo_eng = JRBAEngine(k=3, n_iters=50)
     solo = [
-        s.scheduler.run(s.arrivals, network_events=s.network_events)
+        s.scheduler.run(s.events)
         for s in lanes(solo_eng)
     ]
     fleet_eng = JRBAEngine(k=3, n_iters=50)

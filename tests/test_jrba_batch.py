@@ -38,7 +38,7 @@ def test_batch_matches_sequential(family):
     net = NETS[family]()
     sets = _flow_sets(net, n_instances=6, n_flows=4)
     seq = [jrba(net, fs, k=3, n_iters=200) for fs in sets]
-    bat = jrba_batch(net, sets, k=3, n_iters=200)
+    bat = JRBAEngine(k=3, n_iters=200).solve_many(net, sets)
     assert len(bat) == len(seq)
     for a, b in zip(seq, bat):
         assert b is not None
@@ -128,3 +128,26 @@ def test_path_cache_reuse_is_transparent():
     for a, b in zip(first, second):
         assert a.span == pytest.approx(b.span)
         assert a.routes == b.routes
+
+
+def test_jrba_batch_is_a_deprecated_alias():
+    """The free function survives one release as a warning shim over the
+    engine path and still returns the engine's results."""
+    net = NETS["edge-mesh"]()
+    sets = _flow_sets(net, 2, 3)
+    with pytest.warns(DeprecationWarning, match="JRBAEngine"):
+        bat = jrba_batch(net, sets, k=3, n_iters=100)
+    ref = JRBAEngine(k=3, n_iters=100).solve_many(net, sets)
+    for a, b in zip(bat, ref):
+        assert a.span == pytest.approx(b.span)
+        assert a.routes == b.routes
+
+
+def test_invalidate_network_is_a_deprecated_alias():
+    net = NETS["edge-mesh"]()
+    (flows,) = _flow_sets(net, 1, 4)
+    eng = JRBAEngine(k=3, n_iters=100)
+    eng.solve(net, flows)
+    with pytest.warns(DeprecationWarning, match="invalidate"):
+        eng.invalidate_network(net)
+    assert eng.stats.invalidations_full == 1
