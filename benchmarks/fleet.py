@@ -44,6 +44,13 @@ Five sections:
     their footprints, batched re-solves must accept speculative solutions,
     and wide churn steps (>= 4 affected jobs) must collapse dispatches by
     >= 1.5x aggregated across seeds.
+  * ``latency`` — the observability acceptance: the cosched fleet run with
+    tracing + metrics enabled vs disabled (min-of-repeats each side;
+    instrumentation must cost < 5% wall-clock), plus the observables
+    themselves — per-scenario arrival→scheduled latency p50/p95/p99,
+    fleet barrier-stall fraction, and the engine's solver phase breakdown.
+    ``--trace out.trace.json`` additionally exports the instrumented run as
+    a Chrome trace-event file (load it in https://ui.perfetto.dev).
 
 ``--smoke`` shrinks everything to a few events so CI can catch harness bitrot
 without measuring timings.
@@ -71,6 +78,7 @@ from repro.core import (  # noqa: E402
 )
 from repro.core.graph import NetworkGraph  # noqa: E402
 from repro.fleet import FLEET_SCENARIOS, FleetRuntime, build_scenario_fleet  # noqa: E402
+from repro.obs import Tracer  # noqa: E402
 
 BATCH_POLICIES = ("OTFS", "OTFA")
 
@@ -672,10 +680,94 @@ def bench_churn_spec(
     return out
 
 
+def bench_latency(
+    *,
+    smoke: bool,
+    trace_path: str | None = None,
+    n_sims: int = 16,
+    n_jobs: int = 4,
+    repeats: int = 3,
+) -> dict:
+    """Observability acceptance: the cosched fleet with tracing + metrics
+    enabled vs disabled, same engine warm-up discipline on both sides
+    (min-of-``repeats`` to tame host noise). The <5% overhead bar is the
+    point of the null-object design — instrumentation lives permanently in
+    the event loop, gated by one attribute load + branch.
+
+    The instrumented run also supplies the observables the report surfaces:
+    per-scenario arrival→scheduled latency percentiles (streaming
+    histograms, merged per scenario), the barrier-stall fraction the
+    lockstep runtime attributes per lane, and the engine's phase breakdown.
+    ``trace_path`` exports that run as a Chrome trace-event file."""
+    names = FLEET_SCENARIOS
+    if smoke:
+        n_sims, n_jobs, names, repeats = 4, 2, FLEET_SCENARIOS[:2], 1
+    n_iters = 60 if smoke else 250
+    k = 3
+
+    def run_fleet(engine, *, tracer=None, observe=False):
+        runtime = FleetRuntime(engine, tracer=tracer, observe=observe)
+        return runtime.run(
+            build_scenario_fleet(engine, n_sims, n_jobs=n_jobs, names=names)
+        )
+
+    off_engine = JRBAEngine(k=k, n_iters=n_iters, solver="dense")
+    run_fleet(off_engine)  # warm compiles + caches
+    t_off = float("inf")
+    for _ in range(repeats):
+        t_off = min(t_off, run_fleet(off_engine).wall_seconds)
+
+    on_engine = JRBAEngine(k=k, n_iters=n_iters, solver="dense")
+    run_fleet(on_engine, tracer=Tracer())  # warm (instrumented path)
+    t_on, fleet_on, tracer_on = float("inf"), None, None
+    for _ in range(repeats):
+        tracer = Tracer()
+        fleet = run_fleet(on_engine, tracer=tracer)
+        if fleet.wall_seconds < t_on:
+            t_on, fleet_on, tracer_on = fleet.wall_seconds, fleet, tracer
+
+    if trace_path:
+        tracer_on.to_chrome(trace_path)
+    lat = fleet_on.telemetry.summary["latency"]
+    barrier = {key: v for key, v in lat["barrier"].items() if key != "per_lane"}
+    out = {
+        "n_sims": n_sims,
+        "n_jobs": n_jobs,
+        "n_iters": n_iters,
+        "repeats": repeats,
+        "off_seconds": t_off,
+        "on_seconds": t_on,
+        "overhead_frac": t_on / t_off - 1.0 if t_off else None,
+        "event_latency": lat["events"],
+        "barrier": barrier,
+        "stall_fraction": barrier["stall_fraction"],
+        "solver_phases": lat["solver_phases"],
+        "trace_events": len(tracer_on.events),
+        "trace_path": trace_path,
+    }
+    p = lat["events"]["overall"]
+    print(
+        f"latency[{n_sims} sims x {n_jobs} jobs] "
+        f"wall off {t_off * 1e3:.0f}ms on {t_on * 1e3:.0f}ms "
+        f"(overhead {out['overhead_frac'] * 100:+.1f}%) "
+        f"event p50/p95/p99 {p.get('p50', 0) * 1e3:.1f}/"
+        f"{p.get('p95', 0) * 1e3:.1f}/{p.get('p99', 0) * 1e3:.1f}ms "
+        f"stall={out['stall_fraction']:.2f}"
+    )
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="tiny run, no timing claims")
     ap.add_argument("--out", default="BENCH_fleet.json")
+    ap.add_argument(
+        "--trace",
+        default=None,
+        metavar="OUT.trace.json",
+        help="export the instrumented latency-bench fleet run as a Chrome "
+        "trace-event file (loadable in Perfetto / chrome://tracing)",
+    )
     args = ap.parse_args()
 
     trace_path = os.path.splitext(args.out)[0] + "_trace.jsonl"
@@ -691,6 +783,7 @@ def main() -> None:
         "solver": bench_solver(smoke=args.smoke),
         "churn": bench_churn(smoke=args.smoke),
         "churn_spec": bench_churn_spec(smoke=args.smoke),
+        "latency": bench_latency(smoke=args.smoke, trace_path=args.trace),
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
@@ -776,6 +869,19 @@ def main() -> None:
         assert cspec["dispatch_collapse"] and cspec["dispatch_collapse"] >= 1.5, (
             f"wide churn steps collapsed dispatches only "
             f"{cspec['dispatch_collapse'] or 0:.2f}x < 1.5x"
+        )
+        lat = report["latency"]
+        assert lat["overhead_frac"] is not None and lat["overhead_frac"] < 0.05, (
+            f"instrumentation overhead {lat['overhead_frac'] * 100:.1f}% >= 5% "
+            "on the non-smoke fleet bench"
+        )
+        p99 = lat["event_latency"]["overall"].get("p99")
+        assert p99 is not None and np.isfinite(p99) and p99 > 0, (
+            f"event-latency p99 not recorded finite ({p99!r})"
+        )
+        sf = lat["stall_fraction"]
+        assert np.isfinite(sf) and 0.0 <= sf < 1.0, (
+            f"barrier-stall fraction not recorded finite in [0, 1) ({sf!r})"
         )
 
 

@@ -2,9 +2,11 @@
 show the batched JRBA path solving a fleet of instances in one call, show
 speculative intra-round OTFS batching collapsing a flash crowd's per-job
 solves into per-round dispatches, then co-schedule a whole fleet of
-simulations through ``FleetRuntime`` — lockstep steppers whose per-event
-solves batch across simulations — and write the per-round telemetry trace to
-``fleet_trace.jsonl``.
+simulations through ``FleetRuntime`` with observability on — lockstep
+steppers whose per-event solves batch across simulations — printing the
+per-job latency percentile table and barrier-stall attribution, and writing
+the per-round telemetry trace to ``fleet_trace.jsonl`` plus a
+Perfetto-loadable span trace to ``fleet_trace.chrome.json``.
 
   PYTHONPATH=src python examples/fleet_demo.py
 """
@@ -26,6 +28,7 @@ from repro.core import (
     random_flow_sets,
 )
 from repro.fleet import FleetRuntime, build_scenario_fleet
+from repro.obs import Tracer
 
 
 def scenario_tour() -> None:
@@ -116,7 +119,7 @@ def cosched_fleet(n_sims: int = 12, n_jobs: int = 3) -> None:
     t_seq = time.perf_counter() - t0
 
     fleet_engine = JRBAEngine(k=3, n_iters=200)
-    runtime = FleetRuntime(fleet_engine)
+    runtime = FleetRuntime(fleet_engine, tracer=Tracer(), observe=True)
     runtime.run(build(fleet_engine))  # warm
     fleet = runtime.run(build(fleet_engine))
 
@@ -135,8 +138,28 @@ def cosched_fleet(n_sims: int = 12, n_jobs: int = 3) -> None:
         f"batching: {t.mean_batch_occupancy:.2f} instances/compiled call over "
         f"{len(t.rounds)} dispatch rounds, cache hit rate {t.cache_hit_rate:.0%}"
     )
+
+    lat = t.summary["latency"]
+    print("job arrival->scheduled latency (seconds):")
+    print(f"  {'scenario':24s} {'n':>4s} {'p50':>10s} {'p95':>10s} {'p99':>10s}")
+    rows = {"overall": lat["events"]["overall"], **lat["events"]["by_scenario"]}
+    for name, snap in rows.items():
+        if snap.get("count"):
+            print(
+                f"  {name:24s} {snap['count']:4d} {snap['p50']:10.2e} "
+                f"{snap['p95']:10.2e} {snap['p99']:10.2e}"
+            )
+    barrier = lat["barrier"]
+    print(
+        f"barrier: {barrier['stall_fraction']:.0%} of lane wall-clock spent "
+        f"stalled ({barrier['stall_seconds']:.3f}s stall vs "
+        f"{barrier['own_solve_seconds']:.3f}s own solve)"
+    )
+
     t.to_jsonl("fleet_trace.jsonl")
+    runtime.tracer.to_chrome("fleet_trace.chrome.json")
     print("per-round trace -> fleet_trace.jsonl")
+    print("span trace -> fleet_trace.chrome.json (open at ui.perfetto.dev)")
 
 
 def churn_storm(scenario: str = "wan-mesh-churn", n_jobs: int = 6) -> None:

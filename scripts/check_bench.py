@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import sys
 
 
@@ -153,7 +154,36 @@ def _check_caps(report: dict, label: str) -> list[str]:
                 f"{label}: churn_spec.dispatch_collapse {collapse:.2f}x < 1.5x "
                 "acceptance floor on wide churn steps"
             )
+    lat = report.get("latency", {})
+    if not report.get("smoke") and lat:
+        # observability acceptance caps: instrumentation must stay cheap
+        # (<5% wall-clock), the barrier-stall fraction must be a sane
+        # fraction (0 <= f < 1 by construction — a lane can't stall longer
+        # than the round it waited through), and the event-latency p99 must
+        # have been measured (finite, positive) rather than silently absent
+        overhead = lat.get("overhead_frac")
+        if overhead is None or not _finite(overhead) or overhead >= 0.05:
+            failures.append(
+                f"{label}: latency.overhead_frac {overhead!r} not < 5% "
+                "(instrumentation-on run too slow vs instrumentation-off)"
+            )
+        sf = lat.get("stall_fraction")
+        if sf is None or not _finite(sf) or not (0.0 <= sf < 1.0):
+            failures.append(
+                f"{label}: latency.stall_fraction {sf!r} not a finite "
+                "fraction in [0, 1)"
+            )
+        p99 = (lat.get("event_latency") or {}).get("overall", {}).get("p99")
+        if p99 is None or not _finite(p99) or p99 <= 0:
+            failures.append(
+                f"{label}: latency.event_latency.overall.p99 {p99!r} not "
+                "finite and positive (event spans never recorded?)"
+            )
     return failures
+
+
+def _finite(x) -> bool:
+    return isinstance(x, (int, float)) and math.isfinite(x)
 
 
 REQUIRED_SECTIONS = (
@@ -164,6 +194,7 @@ REQUIRED_SECTIONS = (
     "solver",
     "churn",
     "churn_spec",
+    "latency",
 )
 
 

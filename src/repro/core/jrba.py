@@ -57,6 +57,7 @@ import numpy as np
 
 from .graph import Flow, NetworkGraph
 from .paths import k_shortest_paths, path_link_index, path_links
+from ..obs.trace import NULL_TRACER
 
 __all__ = [
     "EngineStats",
@@ -839,6 +840,17 @@ class EngineStats:
     cache_hits: int = 0
     cache_misses: int = 0
     solve_seconds: float = 0.0
+    # phase split of the engine's wall-clock. ``solve_seconds`` keeps its
+    # historical meaning (relaxation dispatch + analytic fast-path time, the
+    # quantity every benchmark baseline records); the phases decompose where
+    # an engine call actually spends: host program build (path enumeration +
+    # tensor assembly), program-cache hit replay, device relaxation dispatch,
+    # and host rounding/refine/Eq. 15. Identity: solve_seconds ==
+    # dispatch_seconds + (the fast-path share of finalize_seconds).
+    build_seconds: float = 0.0  # build_program: path enum + program tensors
+    cache_seconds: float = 0.0  # program-cache hits: capacity-only replay
+    dispatch_seconds: float = 0.0  # jitted relaxation calls (device dispatch)
+    finalize_seconds: float = 0.0  # host rounding / refine / water-filling
     solver_steps: int = 0  # relaxation steps actually run (early exit counted)
     solver_step_budget: int = 0  # n_iters * relaxation solves (the dense cost)
     fast_path_solves: int = 0  # single-flow programs solved analytically
@@ -912,6 +924,12 @@ class JRBAEngine:
         self.stable_chunks = stable_chunks
         self.prog_cache_size = prog_cache_size
         self.stats = EngineStats()
+        # observability: the fleet runtime points this at its Tracer so
+        # engine dispatches land on one shared "engine" timeline track
+        # (every lane's solves funnel through the same engine); the default
+        # null tracer keeps the solve paths branch-cheap
+        self.tracer = NULL_TRACER
+        self.trace_track = "engine"
         self._seen_shapes: set[tuple] = set()
         # per-network (src, dst, k) -> candidate paths; weak keys so dropping
         # a topology frees its cache
@@ -963,6 +981,7 @@ class JRBAEngine:
     ) -> FlowProgram | None:
         # mirror build_program's flow filter so the bucket is known up front
         # and the program is built exactly once
+        t0 = time.perf_counter()
         self._check_topology(net)
         kept = [f for f in flows if f.src != f.dst and f.volume > 0]
         if not kept:
@@ -980,7 +999,9 @@ class JRBAEngine:
             # share every solve-invariant tensor (and the device-mirror dict)
             # with the cached program; only capacity and the caller's Flow
             # objects are fresh
-            return dataclasses.replace(ent, capacity=cap, flows=kept)
+            out = dataclasses.replace(ent, capacity=cap, flows=kept)
+            self.stats.cache_seconds += time.perf_counter() - t0
+            return out
         paths = self._paths.get(net)
         if paths is None:
             paths = self._paths.setdefault(net, {})
@@ -996,6 +1017,7 @@ class JRBAEngine:
         progs[key] = prog
         while len(progs) > self.prog_cache_size:
             progs.popitem(last=False)
+        self.stats.build_seconds += time.perf_counter() - t0
         return prog
 
     def invalidate(self, net: NetworkGraph, links: np.ndarray | None = None) -> None:
@@ -1182,14 +1204,26 @@ class JRBAEngine:
         if self._use_fast_path(prog, refine):
             t0 = time.perf_counter()
             res = self._fast_single(prog, water_filling)
-            self.stats.solve_seconds += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self.stats.solve_seconds += dt
+            self.stats.finalize_seconds += dt
             return res
         self._note_shape(("single", self._shape_key(prog), self.n_iters))
         t0 = time.perf_counter()
         m, relaxed = self._relax_one(prog)
-        self.stats.solve_seconds += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.stats.solve_seconds += dt
+        self.stats.dispatch_seconds += dt
         self.stats.single_solves += 1
-        return _finalize(prog, m, relaxed, water_filling=water_filling, refine=refine)
+        tracer = self.tracer
+        if tracer.enabled:
+            tracer.complete(
+                "engine/relax", track=self.trace_track, cat="engine", ts=tracer.now() - dt, dur=dt
+            )
+        t0 = time.perf_counter()
+        res = _finalize(prog, m, relaxed, water_filling=water_filling, refine=refine)
+        self.stats.finalize_seconds += time.perf_counter() - t0
+        return res
 
     def solve_many(
         self,
@@ -1246,9 +1280,12 @@ class JRBAEngine:
             if self._use_fast_path(p, refine):
                 t0 = time.perf_counter()
                 results[i] = self._fast_single(p, wf[i])
-                self.stats.solve_seconds += time.perf_counter() - t0
+                dt = time.perf_counter() - t0
+                self.stats.solve_seconds += dt
+                self.stats.finalize_seconds += dt
             else:
                 by_bucket.setdefault(self._shape_key(p), []).append(i)
+        tracer = self.tracer
         for shape, idxs in by_bucket.items():
             group = [progs[i] for i in idxs]
             b_pad = 1
@@ -1261,13 +1298,27 @@ class JRBAEngine:
             padded = group + [group[-1]] * (b_pad - len(group))
             t0 = time.perf_counter()
             solved = self._relax_group(padded, n_real=len(group))[: len(group)]
-            self.stats.solve_seconds += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self.stats.solve_seconds += dt
+            self.stats.dispatch_seconds += dt
             self.stats.batched_solves += 1
             self.stats.batched_instances += len(group)
+            if tracer.enabled:
+                tracer.complete(
+                    "engine/batch",
+                    track=self.trace_track,
+                    cat="engine",
+                    ts=tracer.now() - dt,
+                    dur=dt,
+                    instances=len(group),
+                    batch_pad=b_pad,
+                )
+            t0 = time.perf_counter()
             for i, prog, (m, relaxed) in zip(idxs, group, solved):
                 results[i] = _finalize(
                     prog, m, relaxed, water_filling=wf[i], refine=refine
                 )
+            self.stats.finalize_seconds += time.perf_counter() - t0
         return results
 
 

@@ -53,6 +53,8 @@ from .graph import Flow, JobGraph, NetworkGraph
 from .jrba import JRBAEngine, JRBAResult, link_load_fits
 from .paths import path_links
 from .scenarios import ChurnStep, apply_churn_step
+from ..obs.metrics import NULL_METRICS
+from ..obs.trace import NULL_TRACER
 
 __all__ = [
     "EventTrace",
@@ -314,6 +316,8 @@ class OnlineScheduler:
         speculate: bool = True,
         scoped_churn: bool = True,
         solver: str = "auto",
+        tracer=None,
+        metrics=None,
     ) -> None:
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
@@ -343,6 +347,14 @@ class OnlineScheduler:
         self.engine = engine or JRBAEngine(k=k_paths, n_iters=jrba_iters, solver=solver)
         self.k_paths = self.engine.k
         self.jrba_iters = self.engine.n_iters
+        # observability (repro.obs): a span Tracer and a MetricsRegistry,
+        # defaulting to the shared null objects so the event loop pays one
+        # attribute load + branch when tracing is off. The fleet runtime
+        # re-points these (and trace_track, the tracer timeline this
+        # scheduler's spans land on — one track per lane) before running.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else NULL_METRICS
+        self.trace_track = "sim"
 
     # -- per-policy allocation ----------------------------------------------
     def _allocate(self, job: JobGraph, job_id: int) -> tuple[Allocation, list[Flow]]:
@@ -458,6 +470,13 @@ class OnlineScheduler:
         for i, cs in enumerate(churn_steps):
             heapq.heappush(events, (cs.time, seq, "network", i))
             seq += 1
+        # observability locals: bound at first next(), i.e. after the fleet
+        # runtime has re-pointed tracer/metrics/trace_track on this scheduler
+        tracer = self.tracer
+        track = self.trace_track
+        metrics = self.metrics
+        observing = tracer.enabled or metrics.enabled
+        arrive_wall: dict[int, float] = {}  # job_id -> wall clock at arrival event
         sched_overhead = 0.0
         n_dispatches = n_solves = 0
         spec_rounds = spec_accepted = spec_repaired = 0
@@ -475,6 +494,18 @@ class OnlineScheduler:
             sched_overhead += dt
             n_dispatches += 1
             n_solves += len(reqs)
+            if tracer.enabled:
+                # dt is the wall-clock the driver attributed to this dispatch
+                # (a fleet driver reports this lane's share of the batched
+                # call), drawn as an interval ending now
+                tracer.complete(
+                    "sched/solve",
+                    track=track,
+                    cat="solve",
+                    ts=tracer.now() - dt,
+                    dur=dt,
+                    n_solves=len(reqs),
+                )
             return results
 
         def advance_running(now: float) -> None:
@@ -607,6 +638,7 @@ class OnlineScheduler:
                 res = spec[r.job_id][0]
                 if entry_exact(spec[r.job_id]):
                     churn_spec_accepted += 1
+                    tracer.instant("churn/spec_accept", track=track, cat="churn", job=r.job_id)
                 else:
                     # conflict: an earlier commit moved the residual on this
                     # job's candidate links. Re-solve it on the live residual
@@ -627,6 +659,7 @@ class OnlineScheduler:
                     for rr, rr_res in zip(rest, repair[1:]):
                         spec[rr.job_id] = (rr_res, capR)
                     churn_spec_repaired += 1
+                    tracer.instant("churn/spec_repair", track=track, cat="churn", job=r.job_id)
                 churn_resolves += 1
                 commit_reroute(r, res, now)
             if wide:
@@ -807,6 +840,7 @@ class OnlineScheduler:
                     if sp is not None and flows_ok and spec_exact(sp):
                         res = sp.result
                         spec_accepted += 1
+                        tracer.instant("spec/accept", track=track, cat="spec", job=r.job_id)
                     else:
                         # conflict (or no speculation): the exact re-solve for
                         # THIS job rides one dispatch with a re-speculation of
@@ -842,6 +876,7 @@ class OnlineScheduler:
                             sr.result, sr.capacity0 = rr_res, capR
                         if sp is not None and sp.alloc.feasible:
                             spec_repaired += 1
+                            tracer.instant("spec/repair", track=track, cat="spec", job=r.job_id)
                         if self.speculate:
                             # memoize the fresh exact solve: if the span check
                             # below rejects this job, the next round can carry
@@ -870,6 +905,26 @@ class OnlineScheduler:
                 r.alloc, r.flows = alloc, flows
                 r.schedule_time = now
                 r.last_update = now
+                if observing:
+                    # per-job arrival->scheduled wall latency: measured from
+                    # the moment the arrival event was handled to this
+                    # admission decision (in a fleet this includes barrier
+                    # waits — that is the point: it is the latency an edge
+                    # client would see from this control plane)
+                    t_arr = arrive_wall.pop(r.job_id, None)
+                    if t_arr is not None:
+                        lat = time.perf_counter() - t_arr
+                        metrics.observe("event_latency_s", lat)
+                        tracer.complete(
+                            "job/arrival_to_scheduled",
+                            track=track,
+                            cat="job",
+                            ts=tracer.now() - lat,
+                            dur=lat,
+                            job=r.job_id,
+                            submit=r.submit_time,
+                            scheduled=now,
+                        )
                 q_wait.remove(r)
                 spec_memo.pop(r.job_id, None)
                 newly.append(r)
@@ -891,12 +946,17 @@ class OnlineScheduler:
             if now > max_time:
                 break
             n_events += 1
+            # per-event span: every continue below must tracer.end() first
+            # (the trace-integrity test asserts B/E balance per track)
+            tracer.begin("event/" + kind, track=track, cat="event", t=now, id=jid)
+            metrics.inc("events/" + kind)
             if kind == "network":
                 advance_running(now)
                 effect = apply_churn_step(net, churn_steps[jid])
                 touched, topo_changed = effect.touched, effect.topo_changed
                 churn_events += 1
                 if not topo_changed and not np.any(touched):
+                    tracer.end("event/" + kind, track=track)
                     continue  # every op was a no-op; nothing to refresh
                 if not self.scoped_churn or effect.links_added:
                     # reference mode — or a recovery added links, which can
@@ -956,13 +1016,18 @@ class OnlineScheduler:
                             )
                         ):
                             affected.append(r)
-                    yield from churn_reroute(affected, now)
+                    with tracer.span(
+                        "churn/reroute", track=track, cat="churn", n_affected=len(affected), t=now
+                    ):
+                        yield from churn_reroute(affected, now)
                 elif self.base == "OTFA":
                     if q_run:
                         yield from refresh_otfa(now)
                 else:  # LR/BR/TP re-route + re-share over the mutated net
                     refresh_equal_share(now)
-                yield from schedule_round(now)
+                with tracer.span("sched/round", track=track, cat="round", t=now):
+                    yield from schedule_round(now)
+                tracer.end("event/" + kind, track=track)
                 continue
             r = by_id[jid]
             if kind == "finish":
@@ -972,11 +1037,13 @@ class OnlineScheduler:
                 if r not in q_run or not math.isclose(
                     r.finish_time, now, rel_tol=1e-9, abs_tol=1e-9
                 ):
+                    tracer.end("event/" + kind, track=track)
                     continue  # stale event (span changed after this was queued)
                 advance_running(now)
                 q_run.remove(r)
                 r.remaining_units = 0.0
                 r.done = True
+                tracer.instant("job/finish", track=track, cat="job", job=r.job_id, finish=now)
                 # Algo 3/4 lines 1-5: release compute + bandwidth. Pinned
                 # tasks are skipped symmetrically with admission (the
                 # allocators never debit them), so a full simulation
@@ -994,13 +1061,24 @@ class OnlineScheduler:
                         # the freed bandwidth may un-stall a churn-starved
                         # job (churn_reroute rebuilds the residual itself);
                         # without churn no running job is ever stalled
-                        yield from churn_reroute(stalled, now)
+                        with tracer.span(
+                            "churn/reroute",
+                            track=track,
+                            cat="churn",
+                            n_affected=len(stalled),
+                            t=now,
+                        ):
+                            yield from churn_reroute(stalled, now)
                     else:
                         rebuild_residual_from_running()
             else:  # arrival
                 advance_running(now)
+                if observing:
+                    arrive_wall[r.job_id] = time.perf_counter()
                 q_wait.append(r)
-            yield from schedule_round(now)
+            with tracer.span("sched/round", track=track, cat="round", t=now):
+                yield from schedule_round(now)
+            tracer.end("event/" + kind, track=track)
         unfinished = sum(1 for r in records if not r.done)
         return SimResult(
             records,

@@ -29,6 +29,8 @@ from ..core.graph import JobGraph
 from ..core.jrba import JRBAEngine
 from ..core.online import EventTrace, OnlineScheduler, RoundRequest, SimResult
 from ..core.scenarios import SCENARIOS, ChurnStep
+from ..obs.metrics import MetricsRegistry, StreamingHistogram
+from ..obs.trace import NULL_TRACER, Tracer
 from .telemetry import FleetTelemetry, RoundRecord
 
 __all__ = [
@@ -100,8 +102,19 @@ class _Lane:
 
     sim: FleetSim
     gen: Generator[RoundRequest, tuple, SimResult]
+    idx: int = 0  # position in the fleet (indexes the per-lane stall arrays)
     pending: RoundRequest | None = None
     result: SimResult | None = None
+
+
+def _round_has_real_solves(req: RoundRequest) -> bool:
+    """Does this lane's pending round carry at least one flow that builds a
+    real JRBA program (distinct endpoints, positive volume)? Mirrors the
+    engine's ``build`` filter, so a False round contributes nothing to the
+    shared dispatch."""
+    return any(
+        f.src != f.dst and f.volume > 0 for s in req.solves for f in s.flows
+    )
 
 
 @dataclasses.dataclass
@@ -133,10 +146,38 @@ class FleetRuntime:
     results, and record telemetry. Simulations drop out as they finish; the
     engine's batch-dimension padding keeps the draining fleet on O(log N)
     compiled batch shapes.
+
+    **Barrier-stall attribution.** The lockstep barrier means a lane whose
+    round was cheap still waits for the whole batched dispatch. Each round,
+    lane *i*'s own-solve share is ``dispatch_seconds * n_i / n_total`` (its
+    solves' fraction of the batched call) and its stall is the remainder,
+    ``dispatch_seconds - own_i`` — so per lane ``own + stall`` sums exactly
+    to the dispatch wall-clock of the rounds it was live in (asserted by the
+    conservation test). Attribution is pure arithmetic on already-measured
+    numbers, so it is always on; the summary's ``latency.barrier`` block
+    reports per-lane totals and the fleet-wide stall fraction.
+
+    **Tracing / metrics.** Pass ``tracer=repro.obs.Tracer()`` (and/or
+    ``observe=True``) to record per-event spans on one track per lane plus a
+    shared engine track, per-lane barrier intervals, and per-job
+    arrival→scheduled latency histograms (merged per scenario into
+    ``latency.events``). The runtime re-points each lane scheduler's
+    ``tracer``/``metrics``/``trace_track`` and the engine's ``tracer``; with
+    neither flag the schedulers keep their null objects and the run is
+    byte-identical to an unobserved one (the fleet benchmark's ``latency``
+    section measures the enabled overhead at <5%).
     """
 
-    def __init__(self, engine: JRBAEngine | None = None) -> None:
+    def __init__(
+        self,
+        engine: JRBAEngine | None = None,
+        *,
+        tracer: Tracer | None = None,
+        observe: bool = False,
+    ) -> None:
         self.engine = engine
+        self.tracer = tracer
+        self.observe = observe
 
     def run(self, sims: list[FleetSim]) -> FleetResult:
         if not sims:
@@ -151,6 +192,19 @@ class FleetRuntime:
                     "co-scheduled solves would diverge from standalone runs"
                 )
         telemetry = FleetTelemetry()
+        tracer = self.tracer if self.tracer is not None else NULL_TRACER
+        observing = self.observe or tracer.enabled
+        lane_metrics: list[MetricsRegistry] | None = None
+        if observing:
+            # one timeline track + one metrics registry per lane, engine
+            # spans on a shared track; wiring happens before the steppers
+            # are created so step() binds the observed objects
+            lane_metrics = [MetricsRegistry() for _ in sims]
+            for i, s in enumerate(sims):
+                s.scheduler.tracer = tracer
+                s.scheduler.trace_track = f"lane{i}:{s.name or 'sim'}"
+                s.scheduler.metrics = lane_metrics[i]
+            engine.tracer = tracer
         # snapshot so telemetry reports THIS run's cache behaviour even when
         # the engine was warmed by earlier runs (the benchmark's
         # warm-then-measure pattern)
@@ -158,9 +212,16 @@ class FleetRuntime:
         solver0 = dataclasses.asdict(engine.stats)
         t_start = time.perf_counter()
         lanes = [
-            _Lane(sim=s, gen=s.scheduler.step(s.events, max_time=s.max_time))
-            for s in sims
+            _Lane(sim=s, gen=s.scheduler.step(s.events, max_time=s.max_time), idx=i)
+            for i, s in enumerate(sims)
         ]
+        # per-lane barrier accounting (always on — pure arithmetic): own
+        # solve share, attributed stall, and the dispatch wall-clock of the
+        # rounds the lane was live in (own + stall == wall per lane)
+        lane_own = [0.0] * len(sims)
+        lane_stall = [0.0] * len(sims)
+        lane_wall = [0.0] * len(sims)
+        total_dispatch = 0.0
         for lane in lanes:  # prime: advance to the first solve (or completion)
             self._advance(lane, None)
         round_idx = 0
@@ -178,6 +239,8 @@ class FleetRuntime:
                 stats.batched_instances,
                 stats.solve_seconds,
             )
+            n_requests = sum(1 for ln in live if _round_has_real_solves(ln.pending))
+            t_disp0 = tracer.now() if tracer.enabled else 0.0
             t0 = time.perf_counter()
             outs = engine.solve_many(
                 [s.net for s in solves],
@@ -186,18 +249,48 @@ class FleetRuntime:
                 water_filling=[s.water_filling for s in solves],
             )
             dispatch_seconds = time.perf_counter() - t0
+            total_dispatch += dispatch_seconds
             per_solve = dispatch_seconds / len(solves) if solves else 0.0
+            stall_round = 0.0
             off = 0
             for lane in live:
                 n = len(lane.pending.solves)
-                self._advance(lane, (outs[off : off + n], per_solve * n))
+                # barrier attribution: this lane's own share of the batched
+                # dispatch is its solve fraction; everything else it spent
+                # waiting on the other lanes' solves behind the barrier
+                own = per_solve * n
+                stall = dispatch_seconds - own
+                lane_own[lane.idx] += own
+                lane_stall[lane.idx] += stall
+                lane_wall[lane.idx] += dispatch_seconds
+                stall_round += stall
+                if tracer.enabled and dispatch_seconds > 0.0:
+                    trk = lane.sim.scheduler.trace_track
+                    tracer.complete(
+                        "lane/own_solve",
+                        track=trk,
+                        cat="barrier",
+                        ts=t_disp0,
+                        dur=own,
+                        round=round_idx,
+                        n_solves=n,
+                    )
+                    tracer.complete(
+                        "lane/barrier_stall",
+                        track=trk,
+                        cat="barrier",
+                        ts=t_disp0 + own,
+                        dur=stall,
+                        round=round_idx,
+                    )
+                self._advance(lane, (outs[off : off + n], own))
                 off += n
             batch_calls = stats.batched_solves - calls0
             telemetry.record_round(
                 RoundRecord(
                     round=round_idx,
                     n_live=len(live),
-                    n_requests=len(live),
+                    n_requests=n_requests,
                     n_solves=len(solves),
                     batch_calls=batch_calls,
                     batch_occupancy=(
@@ -207,6 +300,7 @@ class FleetRuntime:
                     ),
                     solve_seconds=stats.solve_seconds - solve0,
                     dispatch_seconds=dispatch_seconds,
+                    stall_seconds=stall_round,
                     cache_hits=stats.cache_hits - hits0,
                     cache_misses=stats.cache_misses - misses0,
                 )
@@ -215,6 +309,65 @@ class FleetRuntime:
         wall = time.perf_counter() - t_start
         results = [ln.result for ln in lanes]
         stats1 = dataclasses.asdict(engine.stats)
+        # engine phase breakdown for THIS run: where the flat solve time
+        # actually went (host build, cache replay, device dispatch, rounding)
+        solver_phases = {
+            key: stats1[key] - solver0[key]
+            for key in (
+                "build_seconds",
+                "cache_seconds",
+                "dispatch_seconds",
+                "finalize_seconds",
+            )
+        }
+        total_stall = sum(lane_stall)
+        total_lane_wall = sum(lane_wall)
+        events_block = None
+        if lane_metrics is not None:
+            overall = StreamingHistogram()
+            by_scenario: dict[str, StreamingHistogram] = {}
+            for s, reg in zip(sims, lane_metrics):
+                h = reg.histograms.get("event_latency_s")
+                if h is None:
+                    continue
+                overall.merge(h)
+                by_scenario.setdefault(s.name or "sim", StreamingHistogram()).merge(h)
+            events_block = {
+                "overall": overall.snapshot(),
+                "by_scenario": {
+                    k: v.snapshot() for k, v in sorted(by_scenario.items())
+                },
+            }
+        latency = {
+            "barrier": {
+                "dispatch_seconds": total_dispatch,
+                "own_solve_seconds": sum(lane_own),
+                "stall_seconds": total_stall,
+                # fraction of total lane-time behind the barrier that was
+                # stall: 0 for a single lane, -> (n-1)/n when every lane
+                # waits a full dispatch on everyone else
+                "stall_fraction": (
+                    total_stall / total_lane_wall if total_lane_wall else 0.0
+                ),
+                "per_lane": [
+                    {
+                        "lane": i,
+                        "name": s.name or "sim",
+                        "own_seconds": lane_own[i],
+                        "stall_seconds": lane_stall[i],
+                        "wall_seconds": lane_wall[i],
+                        "stall_fraction": (
+                            lane_stall[i] / lane_wall[i] if lane_wall[i] else 0.0
+                        ),
+                    }
+                    for i, s in enumerate(sims)
+                ],
+            },
+            # per-job arrival->scheduled wall latency, merged per scenario;
+            # None unless the run observed (tracer enabled or observe=True)
+            "events": events_block,
+            "solver_phases": solver_phases,
+        }
         telemetry.finalize(
             names=[s.name for s in sims],
             results=results,
@@ -231,7 +384,9 @@ class FleetRuntime:
                         "prog_cache_misses",
                     )
                 },
+                "phases": solver_phases,
             },
+            latency=latency,
         )
         return FleetResult(results=results, telemetry=telemetry, wall_seconds=wall)
 

@@ -10,11 +10,13 @@ per line plus a terminal summary line — for offline analysis.
 from __future__ import annotations
 
 import dataclasses
-import json
-import math
 from typing import TYPE_CHECKING
 
 import numpy as np
+
+# strict RFC-8259 serialization now lives in repro.obs.trace, shared with
+# the Chrome trace exporter; this module keeps the historical private name
+from ..obs.trace import dumps_strict as _dumps_strict
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard for type hints only
     from ..core.online import SimResult
@@ -28,7 +30,12 @@ class RoundRecord:
 
     round: int
     n_live: int  # simulations still running when the round started
-    n_requests: int  # RoundRequests collected (== n_live by construction)
+    # lanes whose round carried at least one *real* solve (a flow with
+    # distinct endpoints and positive volume). Idle-lane rounds — empty
+    # solve lists or colocated-only flows that build no program — are the
+    # n_live - n_requests gap, so traces distinguish a genuinely busy round
+    # from one lane dragging a mostly-idle fleet through the barrier
+    n_requests: int
     # individual JRBA programs flattened out of the collected rounds; above
     # n_requests means speculative intra-round batching contributed extra
     # same-round solves to the shared dispatch
@@ -40,6 +47,11 @@ class RoundRecord:
     batch_occupancy: float
     solve_seconds: float  # solver time inside the engine this round
     dispatch_seconds: float  # wall-clock of the whole solve_many call
+    # summed per-lane barrier stall of this round: each live lane waited
+    # dispatch_seconds - its own n/n_total share of the batched call, i.e.
+    # (n_live - 1) * dispatch_seconds in total (see FleetRuntime.run for the
+    # per-lane attribution the latency summary reports)
+    stall_seconds: float
     # cumulative EngineStats counters for THIS run: deltas from the engine's
     # state when FleetRuntime.run began, so a pre-warmed engine doesn't
     # contaminate the measured run's hit rate
@@ -68,9 +80,13 @@ class FleetTelemetry:
         results: "list[SimResult]",
         wall_seconds: float,
         solver: dict | None = None,
+        latency: dict | None = None,
     ) -> dict:
         """Aggregate per-scenario throughput and fleet-level rates. ``names``
-        groups simulations (several fleet lanes may share one scenario name)."""
+        groups simulations (several fleet lanes may share one scenario name).
+        ``latency`` is the runtime-built observability block (barrier-stall
+        attribution, event-latency percentiles, solver phase split) and is
+        surfaced verbatim; None when the caller has no latency data."""
         total_events = sum(r.n_events for r in results)
         by_name: dict[str, list] = {}
         for name, res in zip(names, results):
@@ -132,6 +148,11 @@ class FleetTelemetry:
             # single-flow fast paths, program-tensor cache traffic) — see
             # EngineStats; None when the runtime didn't supply it
             "solver": solver,
+            # observability block (see FleetRuntime.run): per-lane barrier
+            # stall vs own-solve attribution, per-scenario event-latency
+            # percentiles (None unless the run observed), and the engine's
+            # phase breakdown of where solve wall-clock went
+            "latency": latency,
             "scenarios": {
                 name: {
                     "sims": len(group),
@@ -180,19 +201,3 @@ class FleetTelemetry:
             for r in self.rounds:
                 f.write(_dumps_strict({"type": "round", **r.as_dict()}) + "\n")
             f.write(_dumps_strict({"type": "summary", **self.summary}) + "\n")
-
-
-def _sanitize_nonfinite(obj):
-    """Recursively replace non-finite floats (inf / -inf / nan) with None so
-    the result serializes under RFC 8259 (which has no such literals)."""
-    if isinstance(obj, float) and not math.isfinite(obj):
-        return None
-    if isinstance(obj, dict):
-        return {k: _sanitize_nonfinite(v) for k, v in obj.items()}
-    if isinstance(obj, (list, tuple)):
-        return [_sanitize_nonfinite(v) for v in obj]
-    return obj
-
-
-def _dumps_strict(obj) -> str:
-    return json.dumps(_sanitize_nonfinite(obj), allow_nan=False)
