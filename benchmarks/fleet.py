@@ -51,9 +51,16 @@ Five sections:
     fleet barrier-stall fraction, and the engine's solver phase breakdown.
     ``--trace out.trace.json`` additionally exports the instrumented run as
     a Chrome trace-event file (load it in https://ui.perfetto.dev).
+  * ``fleet_async`` — the async continuous-batching runtime headline: an
+    O(1000)-lane mixed-churn fleet under ``AsyncFleetRuntime`` vs the same
+    fleet under the lockstep barrier; records must match bit-for-bit
+    (deviation exactly zero) while the section reports async events/sec,
+    arrival→scheduled p99, dispatcher fire causes and queue-wait
+    percentiles, and the recovered-stall fraction.
 
 ``--smoke`` shrinks everything to a few events so CI can catch harness bitrot
-without measuring timings.
+without measuring timings. All artifacts (telemetry + trace JSONL) derive
+from the ``--out`` stem, so CI jobs only name the stem once.
 """
 from __future__ import annotations
 
@@ -77,7 +84,13 @@ from repro.core import (  # noqa: E402
     random_flow_sets,
 )
 from repro.core.graph import NetworkGraph  # noqa: E402
-from repro.fleet import FLEET_SCENARIOS, FleetRuntime, build_scenario_fleet  # noqa: E402
+from repro.fleet import (  # noqa: E402
+    FLEET_SCENARIOS,
+    AsyncFleetRuntime,
+    FleetRuntime,
+    build_async_fleet,
+    build_scenario_fleet,
+)
 from repro.obs import Tracer  # noqa: E402
 
 BATCH_POLICIES = ("OTFS", "OTFA")
@@ -366,7 +379,9 @@ def bench_cosched(
     t_seq = time.perf_counter() - t0
 
     fleet_engine = JRBAEngine(k=k, n_iters=n_iters, solver="dense")
-    runtime = FleetRuntime(fleet_engine)
+    # pinned lockstep: this section measures the PR-2 barrier-round batching
+    # win specifically (the async driver is benchmarked by `fleet_async`)
+    runtime = FleetRuntime(fleet_engine, mode="lockstep")
     if not smoke:
         runtime.run(build_scenario_fleet(fleet_engine, n_sims, n_jobs=n_jobs, names=names))
     fleet = runtime.run(
@@ -706,7 +721,10 @@ def bench_latency(
     k = 3
 
     def run_fleet(engine, *, tracer=None, observe=False):
-        runtime = FleetRuntime(engine, tracer=tracer, observe=observe)
+        # pinned lockstep: the stall_fraction readout below asserts the
+        # barrier-specific attribution (async queue wait is a different
+        # quantity, reported by `fleet_async`)
+        runtime = FleetRuntime(engine, tracer=tracer, observe=observe, mode="lockstep")
         return runtime.run(
             build_scenario_fleet(engine, n_sims, n_jobs=n_jobs, names=names)
         )
@@ -757,6 +775,97 @@ def bench_latency(
     return out
 
 
+def bench_fleet_async(
+    *,
+    smoke: bool,
+    n_lanes: int = 1000,
+    n_jobs: int = 2,
+    trace_path: str | None = None,
+) -> dict:
+    """The async-runtime headline: an O(1000)-lane mixed-churn fleet (every
+    4th lane carries a capacity-drift trace) under the continuous-batching
+    dispatcher vs the same fleet under the lockstep barrier. The contract is
+    bit-identical per-lane records — ``max_record_rel_dev`` must be exactly
+    0.0, no tolerance — while the dispatcher swaps the barrier stall for
+    bounded queue wait. Headline metrics: async events/sec, per-job
+    arrival→scheduled p99, and the fraction of lockstep stall the async
+    driver recovered (negative at small scale, where the barrier is cheap
+    and queue bookkeeping isn't amortized — the dispatcher is built for the
+    1000-lane regime this section times)."""
+    if smoke:
+        n_lanes = 24
+    n_iters = 40
+    k = 2
+    batch_target, deadline_s = 32, 0.002
+
+    def build(engine):
+        return build_async_fleet(engine, n_lanes, n_jobs=n_jobs, churn_every=4)
+
+    # dense-pinned like `cosched`/`batch`: exact (Nf, K, L) bucket keys make
+    # dispatch occupancy directly interpretable (the sparse solver re-buckets
+    # on compressed shapes inside each dispatch; its record equivalence is
+    # covered by tests/test_fleet_async.py)
+    lock_engine = JRBAEngine(k=k, n_iters=n_iters, solver="dense")
+    lock_rt = FleetRuntime(lock_engine, mode="lockstep")
+    if not smoke:  # warm compiles + caches so the timed passes compare steady state
+        lock_rt.run(build(lock_engine))
+    lock = lock_rt.run(build(lock_engine))
+
+    async_engine = JRBAEngine(k=k, n_iters=n_iters, solver="dense")
+    async_rt = AsyncFleetRuntime(
+        async_engine, observe=True, batch_target=batch_target, deadline_s=deadline_s
+    )
+    if not smoke:
+        async_rt.run(build(async_engine))
+    asyn = async_rt.run(build(async_engine))
+    if trace_path:
+        asyn.telemetry.to_jsonl(trace_path)
+
+    lock_bar = lock.telemetry.summary["latency"]["barrier"]
+    async_bar = asyn.telemetry.summary["latency"]["barrier"]
+    queue = asyn.telemetry.summary["latency"]["queue"]
+    events = asyn.telemetry.summary["latency"]["events"]["overall"]
+    out = {
+        "n_lanes": n_lanes,
+        "n_jobs": n_jobs,
+        "n_iters": n_iters,
+        "batch_target": batch_target,
+        "deadline_s": deadline_s,
+        "max_record_rel_dev": max_record_dev(lock.results, asyn.results),
+        "events": asyn.total_events,
+        "unfinished": asyn.unfinished,
+        "events_per_s": asyn.total_events / asyn.wall_seconds,
+        "lockstep_events_per_s": lock.total_events / lock.wall_seconds,
+        "speedup_wall_clock": lock.wall_seconds / asyn.wall_seconds,
+        "event_latency_p50": events.get("p50"),
+        "event_latency_p99": events.get("p99"),
+        "async_stall_seconds": async_bar["stall_seconds"],
+        "async_stall_fraction": async_bar["stall_fraction"],
+        "lockstep_stall_seconds": lock_bar["stall_seconds"],
+        "lockstep_stall_fraction": lock_bar["stall_fraction"],
+        "recovered_stall_frac": (
+            1.0 - async_bar["stall_seconds"] / lock_bar["stall_seconds"]
+            if lock_bar["stall_seconds"]
+            else None
+        ),
+        "mean_batch_occupancy": asyn.telemetry.mean_batch_occupancy,
+        "dispatches": queue["dispatches"],
+        "fired_by": queue["fired_by"],
+        "queue_wait": queue["wait"],
+        "trace_path": trace_path,
+    }
+    print(
+        f"fleet_async[{n_lanes} lanes x {n_jobs} jobs] "
+        f"dev={out['max_record_rel_dev']:.2e} "
+        f"{out['events_per_s']:.0f} ev/s (lockstep {out['lockstep_events_per_s']:.0f}, "
+        f"{out['speedup_wall_clock']:.2f}x) "
+        f"p99={(out['event_latency_p99'] or 0) * 1e3:.1f}ms "
+        f"occupancy={out['mean_batch_occupancy']:.2f} "
+        f"stall {out['lockstep_stall_fraction']:.2f}->{out['async_stall_fraction']:.2f}"
+    )
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="tiny run, no timing claims")
@@ -770,7 +879,10 @@ def main() -> None:
     )
     args = ap.parse_args()
 
-    trace_path = os.path.splitext(args.out)[0] + "_trace.jsonl"
+    # every artifact derives from the --out stem (CI names them the same way)
+    stem = os.path.splitext(args.out)[0]
+    trace_path = stem + "_trace.jsonl"
+    async_trace_path = stem + "_async_trace.jsonl"
     n_jobs, seeds = (3, 1) if args.smoke else (8, 2)
     report = {
         "smoke": args.smoke,
@@ -784,10 +896,13 @@ def main() -> None:
         "churn": bench_churn(smoke=args.smoke),
         "churn_spec": bench_churn_spec(smoke=args.smoke),
         "latency": bench_latency(smoke=args.smoke, trace_path=args.trace),
+        "fleet_async": bench_fleet_async(
+            smoke=args.smoke, trace_path=async_trace_path
+        ),
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
-    print(f"wrote {args.out} (+ {trace_path})")
+    print(f"wrote {args.out} (+ {trace_path}, {async_trace_path})")
     if not args.smoke:
         dev = report["batch"]["max_span_rel_dev"]
         speedup = report["batch"]["speedup_solve_stage"]
@@ -882,6 +997,22 @@ def main() -> None:
         sf = lat["stall_fraction"]
         assert np.isfinite(sf) and 0.0 <= sf < 1.0, (
             f"barrier-stall fraction not recorded finite in [0, 1) ({sf!r})"
+        )
+        fa = report["fleet_async"]
+        assert fa["max_record_rel_dev"] == 0.0, (
+            f"async runtime deviated from lockstep records at "
+            f"{fa['n_lanes']} lanes ({fa['max_record_rel_dev']:.3e})"
+        )
+        assert np.isfinite(fa["events_per_s"]) and fa["events_per_s"] > 0, (
+            f"async events/sec not recorded finite ({fa['events_per_s']!r})"
+        )
+        ap99 = fa["event_latency_p99"]
+        assert ap99 is not None and np.isfinite(ap99) and ap99 > 0, (
+            f"async event-latency p99 not recorded finite ({ap99!r})"
+        )
+        assert fa["mean_batch_occupancy"] > 1.0, (
+            f"async dispatcher never batched across lanes "
+            f"(occupancy {fa['mean_batch_occupancy']:.2f})"
         )
 
 

@@ -6,7 +6,10 @@ simulations through ``FleetRuntime`` with observability on — lockstep
 steppers whose per-event solves batch across simulations — printing the
 per-job latency percentile table and barrier-stall attribution, and writing
 the per-round telemetry trace to ``fleet_trace.jsonl`` plus a
-Perfetto-loadable span trace to ``fleet_trace.chrome.json``.
+Perfetto-loadable span trace to ``fleet_trace.chrome.json``. The async
+section then re-runs a mixed-churn fleet under ``AsyncFleetRuntime``
+(continuous batching, no barrier) and prints both runtimes' events/sec, the
+recovered stall fraction, and the records-identical check.
 
   PYTHONPATH=src python examples/fleet_demo.py
 """
@@ -27,7 +30,7 @@ from repro.core import (
     random_edge_network,
     random_flow_sets,
 )
-from repro.fleet import FleetRuntime, build_scenario_fleet
+from repro.fleet import AsyncFleetRuntime, FleetRuntime, build_async_fleet, build_scenario_fleet
 from repro.obs import Tracer
 
 
@@ -162,6 +165,46 @@ def cosched_fleet(n_sims: int = 12, n_jobs: int = 3) -> None:
     print("span trace -> fleet_trace.chrome.json (open at ui.perfetto.dev)")
 
 
+def async_fleet(n_sims: int = 24, n_jobs: int = 2) -> None:
+    print(f"\n=== Async continuous batching: {n_sims} mixed-churn lanes ===")
+    # every 4th lane carries a capacity-drift churn trace; the async
+    # dispatcher replaces the lockstep barrier with per-shape-bucket queues
+    # (REPRO_FLEET_RUNTIME=async flips any FleetRuntime() the same way)
+
+    def build(engine):
+        return build_async_fleet(engine, n_sims, n_jobs=n_jobs, churn_every=4)
+
+    lock_engine = JRBAEngine(k=2, n_iters=60)
+    lock_rt = FleetRuntime(lock_engine, mode="lockstep")
+    lock_rt.run(build(lock_engine))  # warm compile caches
+    lock = lock_rt.run(build(lock_engine))
+
+    async_engine = JRBAEngine(k=2, n_iters=60)
+    async_rt = AsyncFleetRuntime(async_engine, batch_target=8, deadline_s=0.002)
+    async_rt.run(build(async_engine))  # warm
+    asyn = async_rt.run(build(async_engine))
+
+    same = all(
+        [r.finish_time for r in a.records] == [r.finish_time for r in b.records]
+        for a, b in zip(lock.results, asyn.results)
+    )
+    print(f"lockstep: {lock.total_events / lock.wall_seconds:7.0f} events/s")
+    print(f"async:    {asyn.total_events / asyn.wall_seconds:7.0f} events/s")
+    lock_stall = lock.telemetry.summary["latency"]["barrier"]["stall_seconds"]
+    async_stall = asyn.telemetry.summary["latency"]["barrier"]["stall_seconds"]
+    recovered = 1.0 - async_stall / lock_stall if lock_stall else 0.0
+    queue = asyn.telemetry.summary["latency"]["queue"]
+    print(
+        f"stall: {lock_stall:.3f}s behind the barrier -> {async_stall:.3f}s "
+        f"in queue ({recovered:+.0%} recovered)"
+    )
+    print(
+        f"dispatcher: {queue['dispatches']} fires ({queue['fired_by']}), "
+        f"occupancy {asyn.telemetry.mean_batch_occupancy:.2f}"
+    )
+    print(f"records identical to lockstep: {same}")
+
+
 def churn_storm(scenario: str = "wan-mesh-churn", n_jobs: int = 6) -> None:
     print(f"\n=== Network churn: {scenario} (drift + failures + MMPP dips) ===")
     runs = {}
@@ -223,5 +266,6 @@ if __name__ == "__main__":
     batched_fleet()
     speculative_rounds()
     cosched_fleet()
+    async_fleet()
     churn_storm()
     churn_speculation()

@@ -7,12 +7,15 @@ write-only artifacts.
 Two kinds of checks:
 
   * **Correctness caps** (always, including ``--smoke`` reports): the batch
-    and cosched span deviations stay within 1%, and the round_batch, solver
-    and churn record deviations stay exactly zero — speculative OTFS must
-    reproduce sequential admissions bit-for-bit, and the sparse congestion
-    solver must reproduce dense-reference scheduler records bit-for-bit
-    (including under network churn, where every job must also finish across
-    failure/recovery cycles), at any scale.
+    and cosched span deviations stay within 1%, and the round_batch, solver,
+    churn and fleet_async record deviations stay exactly zero — speculative
+    OTFS must reproduce sequential admissions bit-for-bit, the sparse
+    congestion solver must reproduce dense-reference scheduler records
+    bit-for-bit (including under network churn, where every job must also
+    finish across failure/recovery cycles), and the async continuous-batching
+    runtime must reproduce lockstep records bit-for-bit, at any scale. In
+    non-smoke reports fleet_async additionally needs finite positive
+    events/sec and arrival→scheduled p99 and cross-lane batch occupancy > 1.
   * **Regression ratios** (only when BOTH reports are non-smoke, since smoke
     timings are meaningless): every tracked machine-relative metric —
     batch/cosched/round_batch speedups, batch occupancy, dispatch collapse,
@@ -46,6 +49,8 @@ def _ratio_metrics(report: dict, *, absolute: bool = False) -> dict[str, float]:
                     out[f"{key}.{metric}"] = row[metric]
         if report.get("cosched", {}).get("events_per_s") is not None:
             out["cosched.events_per_s"] = report["cosched"]["events_per_s"]
+        if report.get("fleet_async", {}).get("events_per_s") is not None:
+            out["fleet_async.events_per_s"] = report["fleet_async"]["events_per_s"]
     batch = report.get("batch", {})
     for metric in ("speedup_solve_stage", "speedup_end_to_end"):
         if batch.get(metric) is not None:
@@ -59,6 +64,12 @@ def _ratio_metrics(report: dict, *, absolute: bool = False) -> dict[str, float]:
         for metric in ("speedup_wall_clock", "dispatch_collapse", "spec_accept_rate"):
             if row.get(metric) is not None:
                 out[f"{key}.{metric}"] = row[metric]
+    fa = report.get("fleet_async", {})
+    if fa.get("mean_batch_occupancy") is not None:
+        out["fleet_async.mean_batch_occupancy"] = fa["mean_batch_occupancy"]
+    # fleet_async.events_per_s is absolute-only (machine-dependent, like the
+    # per-scenario throughputs); its non-smoke acceptance (finite, positive,
+    # plus p99 and zero record deviation) is capped in _check_caps.
     # solver speedups are deliberately NOT ratio-gated: on small-L
     # topologies the solver is dispatch-bound (its ~1x ratio swings with
     # host load), and even the compute-dominated wan-mesh-xl ratio moves
@@ -154,6 +165,35 @@ def _check_caps(report: dict, label: str) -> list[str]:
                 f"{label}: churn_spec.dispatch_collapse {collapse:.2f}x < 1.5x "
                 "acceptance floor on wide churn steps"
             )
+    fa = report.get("fleet_async", {})
+    dev = fa.get("max_record_rel_dev")
+    if dev is not None and dev != 0.0:
+        failures.append(
+            f"{label}: fleet_async.max_record_rel_dev {dev:.3e} != 0 "
+            "(async runtime diverged from lockstep records)"
+        )
+    if not report.get("smoke") and fa:
+        # the async acceptance: events/sec measured finite at O(1000) lanes,
+        # a finite positive arrival->scheduled p99 (the dispatcher's latency
+        # SLO readout), and cross-lane batching actually happening
+        eps = fa.get("events_per_s")
+        if eps is None or not _finite(eps) or eps <= 0:
+            failures.append(
+                f"{label}: fleet_async.events_per_s {eps!r} not finite "
+                "and positive"
+            )
+        p99 = fa.get("event_latency_p99")
+        if p99 is None or not _finite(p99) or p99 <= 0:
+            failures.append(
+                f"{label}: fleet_async.event_latency_p99 {p99!r} not finite "
+                "and positive (event spans never recorded?)"
+            )
+        occ = fa.get("mean_batch_occupancy")
+        if occ is not None and occ <= 1.0:
+            failures.append(
+                f"{label}: fleet_async.mean_batch_occupancy {occ:.2f} <= 1 "
+                "(dispatcher never batched across lanes)"
+            )
     lat = report.get("latency", {})
     if not report.get("smoke") and lat:
         # observability acceptance caps: instrumentation must stay cheap
@@ -195,6 +235,7 @@ REQUIRED_SECTIONS = (
     "churn",
     "churn_spec",
     "latency",
+    "fleet_async",
 )
 
 

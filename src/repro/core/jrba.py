@@ -959,6 +959,27 @@ class JRBAEngine:
             self._seen_shapes.add(key)
             self.stats.cache_misses += 1
 
+    def bucket_key(self, net: NetworkGraph, flows: list[Flow]) -> tuple:
+        """Cheap dispatch-grouping key for a (net, flows) pair — the key the
+        async fleet dispatcher queues :class:`~repro.core.SolveRequest`s
+        under, computed WITHOUT enumerating paths or building the program
+        (both of which ``build`` pays exactly once at solve time).
+
+        For the dense solver the key — ``(Nf bucket, k, L)`` — is exactly the
+        compiled-shape signature, so one queued bucket is one vmapped call.
+        Sparse/Pallas signatures additionally depend on the active-link
+        compression (``La_pad``, ``Pmax``), which only the built program
+        knows; there the key is a *proxy* — programs sharing it usually share
+        a compiled shape, and ``solve_many`` re-buckets exactly inside the
+        dispatch, so a mixed bucket costs extra compiled calls, never a wrong
+        result. Empty programs (colocated-only / zero-volume flows) collapse
+        to ``("empty",)``: they never reach the solver and any driver can
+        answer them in any grouping."""
+        kept = sum(1 for f in flows if f.src != f.dst and f.volume > 0)
+        if not kept:
+            return ("empty",)
+        return (self.bucket(kept), self.k, len(net.links))
+
     def _shape_key(self, prog: FlowProgram) -> tuple:
         """Compiled-signature key of one program under the active solver.
         Sparse solves never see L, so instances from different topologies

@@ -226,12 +226,21 @@ class SimResult:
 
 @dataclasses.dataclass
 class SolveRequest:
-    """One JRBA program the simulation needs solved."""
+    """One JRBA program the simulation needs solved.
+
+    ``bucket`` is the engine's dispatch-grouping key for this program
+    (:meth:`JRBAEngine.bucket_key`), stamped by the stepper at yield time so
+    an async driver can queue the request under its shape bucket without
+    touching the engine or the program. ``("empty",)`` marks a program the
+    solver never sees (the driver may answer it ``None`` from any dispatch);
+    ``None`` means the stepper predates bucketing and the driver must group
+    however it likes."""
 
     net: NetworkGraph
     flows: list[Flow]
     capacity: np.ndarray  # residual (OTFS) or full (OTFA) link capacity
     water_filling: bool = False
+    bucket: tuple | None = None
 
 
 @dataclasses.dataclass
@@ -252,7 +261,17 @@ class RoundRequest:
     scheduler's own engine (``solve`` for singletons, ``solve_many``
     otherwise); ``repro.fleet.FleetRuntime`` instead flattens every live
     simulation's round into a single batched :meth:`JRBAEngine.solve_many`
-    call."""
+    call.
+
+    The stepper does NOT care how the driver groups the work: the async
+    fleet runtime splits one round's solves across shape-bucket queues and
+    answers only once every part has completed — possibly from different
+    ``solve_many`` dispatches, completed in any order, with ``seconds``
+    summing this round's share of each dispatch it rode. The reply contract
+    is only that ``results`` aligns index-for-index with ``solves`` and that
+    each result is what :meth:`JRBAEngine.solve` would return for that
+    request — the engine's per-lane outputs are composition-independent, so
+    any grouping yields bit-identical records."""
 
     solves: list[SolveRequest]
 
@@ -490,6 +509,8 @@ class OnlineScheduler:
             :class:`RoundRequest`, books the protocol counters and the solver
             wall-clock, and returns the aligned result list."""
             nonlocal sched_overhead, n_dispatches, n_solves
+            for s in reqs:
+                s.bucket = self.engine.bucket_key(s.net, s.flows)
             results, dt = yield RoundRequest(reqs)
             sched_overhead += dt
             n_dispatches += 1

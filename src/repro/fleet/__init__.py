@@ -1,26 +1,35 @@
 """Fleet co-scheduling: run many independent online-scheduling simulations
-in lockstep and batch their JRBA solves through one shared, compiled engine.
+and batch their JRBA solves through one shared, compiled engine — in lockstep
+rounds or via the async continuous-batching dispatcher (``FleetRuntime(mode=
+...)`` / ``REPRO_FLEET_RUNTIME``; identical per-lane records either way).
 
 Entry point: build one :class:`FleetSim` per simulation (all schedulers
 sharing one :class:`~repro.core.JRBAEngine`), then ``FleetRuntime().run(sims)``.
-See ``examples/fleet_demo.py`` and the ``cosched`` section of
-``benchmarks/fleet.py``.
+See ``examples/fleet_demo.py`` and the ``cosched`` / ``fleet_async`` sections
+of ``benchmarks/fleet.py``.
 """
 from .runtime import (
+    FLEET_RUNTIMES,
     FLEET_SCENARIOS,
+    AsyncFleetRuntime,
     FleetResult,
     FleetRuntime,
     FleetSim,
+    build_async_fleet,
     build_scenario_fleet,
 )
-from .telemetry import FleetTelemetry, RoundRecord
+from .telemetry import DispatchRecord, FleetTelemetry, RoundRecord
 
 __all__ = [
+    "FLEET_RUNTIMES",
     "FLEET_SCENARIOS",
+    "AsyncFleetRuntime",
+    "DispatchRecord",
     "FleetResult",
     "FleetRuntime",
     "FleetSim",
     "FleetTelemetry",
     "RoundRecord",
+    "build_async_fleet",
     "build_scenario_fleet",
 ]

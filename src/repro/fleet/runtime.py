@@ -1,6 +1,5 @@
 """Fleet co-scheduling runtime: N independent online-scheduling simulations
-advanced in lockstep so their per-event JRBA solves batch into single
-compiled calls.
+whose per-event JRBA solves batch into single compiled calls.
 
 A single :class:`~repro.core.OnlineScheduler` run solves its JRBA instances
 one at a time — each solve is a tiny tensor program whose dispatch overhead
@@ -9,11 +8,25 @@ traffic needs it. The runtime exploits that the simulations are *mutually
 independent* (each owns its topology and arrival trace): it drives every
 simulation's resumable stepper (:meth:`OnlineScheduler.step`) to its next
 pending :class:`~repro.core.RoundRequest` (one or more solves — speculative
-OTFS rounds carry one per waiting job), flattens all pending solves through
-the extended :meth:`JRBAEngine.solve_many` (which batches across networks by
-shape bucket), and resumes each simulation with its own slice of results.
-Simulated clocks advance independently — lockstep is over *solve rounds*,
-not simulated time, which is sound precisely because no state is shared.
+OTFS rounds carry one per waiting job) and batches the pending solves
+through the extended :meth:`JRBAEngine.solve_many` (which batches across
+networks by shape bucket). Simulated clocks advance independently — no state
+is shared, so any grouping of the solves yields bit-identical records.
+
+Two drivers implement that contract (``FleetRuntime(mode=...)``, or the
+``REPRO_FLEET_RUNTIME`` env var; both produce identical per-lane records):
+
+* ``"lockstep"`` — advance every live lane to its next round, flatten all
+  rounds through ONE ``solve_many``, resume everyone, repeat. Maximal
+  batching, but a global barrier: the slowest lane stalls the whole fleet
+  each round (PR 7's ``latency.barrier`` block measures exactly how much).
+* ``"async"`` — continuous batching, the serving-engine decode-batcher
+  pattern: lanes run as independent steppers whose solves land in per-shape-
+  bucket queues, and a dispatcher fires one ``solve_many`` per bucket
+  whenever the bucket fills (``batch_target``) or its oldest entry's wait
+  exceeds a deadline (``deadline_s``). No barrier — a lane resumes the
+  moment its own round completes, so O(1000) lanes keep the engine saturated
+  without convoying behind the stragglers.
 
 This is the orchestrator-level analogue of Oakestra's root/cluster split and
 KCES's cloud-edge pooling: one control plane multiplexing many edge
@@ -21,23 +34,36 @@ clusters' scheduling decisions through shared compute.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import os
 import time
 from typing import Generator
 
+import numpy as np
+
 from ..core.graph import JobGraph
 from ..core.jrba import JRBAEngine
-from ..core.online import EventTrace, OnlineScheduler, RoundRequest, SimResult
-from ..core.scenarios import SCENARIOS, ChurnStep
+from ..core.online import (
+    EventTrace,
+    OnlineScheduler,
+    RoundRequest,
+    SimResult,
+    SolveRequest,
+)
+from ..core.scenarios import SCENARIOS, ChurnStep, capacity_drift_trace
 from ..obs.metrics import MetricsRegistry, StreamingHistogram
 from ..obs.trace import NULL_TRACER, Tracer
-from .telemetry import FleetTelemetry, RoundRecord
+from .telemetry import DispatchRecord, FleetTelemetry, RoundRecord
 
 __all__ = [
+    "FLEET_RUNTIMES",
     "FLEET_SCENARIOS",
+    "AsyncFleetRuntime",
     "FleetSim",
     "FleetResult",
     "FleetRuntime",
+    "build_async_fleet",
     "build_scenario_fleet",
 ]
 
@@ -48,6 +74,10 @@ Arrivals = list[tuple[float, JobGraph, float]]
 # actually batch (wan-mesh's L varies per seed — every lane would sit in a
 # private bucket and misrepresent co-scheduling)
 FLEET_SCENARIOS = ("edge-mesh", "edge-cloud", "fat-tree", "hetero-low")
+
+# the two fleet drivers; selected per-runtime via FleetRuntime(mode=...) or
+# fleet-wide via the REPRO_FLEET_RUNTIME environment variable
+FLEET_RUNTIMES = ("lockstep", "async")
 
 
 @dataclasses.dataclass
@@ -96,6 +126,37 @@ def build_scenario_fleet(
     return sims
 
 
+def build_async_fleet(
+    engine: JRBAEngine,
+    n_sims: int,
+    *,
+    n_jobs: int = 4,
+    names: tuple[str, ...] = FLEET_SCENARIOS,
+    seed0: int = 0,
+    churn_every: int = 4,
+) -> list[FleetSim]:
+    """:func:`build_scenario_fleet` with every ``churn_every``-th lane
+    carrying a capacity-drift churn trace over its arrival horizon — the
+    mixed-churn fleet the async benchmark runs at O(1000) lanes. Drift-only
+    churn keeps each lane's link count (hence its shape bucket) fixed while
+    still forcing mid-flight re-solves, so churn lanes keep batching with
+    their static siblings instead of fragmenting into per-lane compiled
+    shapes the way topology churn (wan-mesh style, seed-dependent L) would.
+    ``churn_every=0`` disables churn entirely."""
+    sims = build_scenario_fleet(
+        engine, n_sims, n_jobs=n_jobs, names=names, seed0=seed0
+    )
+    for i, s in enumerate(sims):
+        if not churn_every or i % churn_every:
+            continue
+        # a private stream per lane, offset out of the scenario seed range so
+        # churn draws never correlate with topology/arrival draws
+        rng = np.random.RandomState(90_000 + seed0 + i)
+        t_end = max((t for t, _, _ in s.arrivals), default=0.0) * 1.25 + 10.0
+        s.network_events = capacity_drift_trace(s.scheduler.net, rng, t_end=t_end)
+    return sims
+
+
 @dataclasses.dataclass
 class _Lane:
     """Runtime state of one simulation stepper."""
@@ -105,6 +166,31 @@ class _Lane:
     idx: int = 0  # position in the fleet (indexes the per-lane stall arrays)
     pending: RoundRequest | None = None
     result: SimResult | None = None
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One lane round in the async dispatcher: its solves fan out across
+    shape-bucket queues and may complete from different dispatches in any
+    order; the lane resumes only when ``remaining`` hits zero, receiving the
+    aligned ``results`` and its summed share of every dispatch it rode."""
+
+    lane: _Lane
+    solves: list[SolveRequest]
+    results: list
+    remaining: int
+    enqueue_ts: float  # wall clock when the round was enqueued
+    own_seconds: float = 0.0  # this round's amortized share of its dispatches
+
+
+@dataclasses.dataclass
+class _QueueEntry:
+    """One solve waiting in a shape-bucket queue."""
+
+    inflight: _InFlight
+    pos: int  # index into inflight.solves / .results
+    seq: int  # global enqueue order (cross-bucket age tie-break)
+    ts: float  # wall clock at enqueue (deadline + queue-wait measurement)
 
 
 def _round_has_real_solves(req: RoundRequest) -> bool:
@@ -136,48 +222,87 @@ class FleetResult:
 
 
 class FleetRuntime:
-    """Lockstep multi-simulation driver over one shared :class:`JRBAEngine`.
+    """Multi-simulation driver over one shared :class:`JRBAEngine`, in one of
+    two modes (see the module docstring): ``"lockstep"`` barrier rounds or
+    ``"async"`` continuous batching. ``mode=None`` reads the
+    ``REPRO_FLEET_RUNTIME`` environment variable (default ``"lockstep"``), so
+    a CI leg can flip a whole test suite's fleets without touching call
+    sites; an explicit ``mode=`` always wins.
 
-    Every round: collect each live simulation's pending round (one or more
-    solves — speculative OTFS rounds batch all their waiting jobs), flatten
-    them all through ``solve_many`` (same-shape instances share a compiled
-    vmapped call; solver wall-clock is amortized per solve for per-sim
-    ``sched_overhead`` accounting), resume each stepper with its slice of
-    results, and record telemetry. Simulations drop out as they finish; the
-    engine's batch-dimension padding keeps the draining fleet on O(log N)
-    compiled batch shapes.
+    **Lockstep.** Every round: collect each live simulation's pending round
+    (one or more solves — speculative OTFS rounds batch all their waiting
+    jobs), flatten them all through ``solve_many`` (same-shape instances
+    share a compiled vmapped call; solver wall-clock is amortized per solve
+    for per-sim ``sched_overhead`` accounting), resume each stepper with its
+    slice of results, and record a :class:`RoundRecord`. Simulations drop out
+    as they finish; the engine's batch-dimension padding keeps the draining
+    fleet on O(log N) compiled batch shapes.
 
-    **Barrier-stall attribution.** The lockstep barrier means a lane whose
-    round was cheap still waits for the whole batched dispatch. Each round,
-    lane *i*'s own-solve share is ``dispatch_seconds * n_i / n_total`` (its
-    solves' fraction of the batched call) and its stall is the remainder,
-    ``dispatch_seconds - own_i`` — so per lane ``own + stall`` sums exactly
-    to the dispatch wall-clock of the rounds it was live in (asserted by the
-    conservation test). Attribution is pure arithmetic on already-measured
-    numbers, so it is always on; the summary's ``latency.barrier`` block
-    reports per-lane totals and the fleet-wide stall fraction.
+    **Async.** Each lane's pending solves enter per-shape-bucket FIFO queues
+    (keyed by :meth:`JRBAEngine.bucket_key`, stamped on the
+    :class:`SolveRequest` by the stepper). The dispatcher repeatedly picks a
+    bucket — one whose head has waited ≥ ``deadline_s`` (oldest head first),
+    else one holding ≥ ``batch_target`` entries (fullest first), else the
+    bucket with the oldest head (so a lone odd-shaped lane is never
+    starved) — takes up to ``batch_target`` entries, and runs them through
+    one ``solve_many``. A lane resumes as soon as its own round completes and
+    immediately enqueues its next one, recorded as a
+    :class:`DispatchRecord` per fire. Everything is cooperative and
+    single-threaded: determinism needs no locks, and per-lane records are
+    bit-identical to the lockstep driver because the engine's per-program
+    results are composition-independent (the invariant every batching layer
+    of this codebase holds).
+
+    **Stall attribution** (always on — pure arithmetic). Each lane round's
+    *own* share of a shared dispatch is ``dispatch_seconds * n_i / n_total``
+    and the rest of the time it spent waiting on co-batched work is *stall*:
+    under lockstep that wait is the barrier (``own + stall`` sums exactly to
+    the dispatch wall-clock of the rounds the lane was live in), under async
+    it is queue wait (``own + stall == answer - enqueue`` per round). The
+    summary's ``latency.barrier`` block reports per-lane totals and the
+    fleet-wide stall fraction for both modes — the async driver's reason to
+    exist is pushing that fraction toward zero — and async adds a
+    ``latency.queue`` block (fire causes, wait percentiles).
 
     **Tracing / metrics.** Pass ``tracer=repro.obs.Tracer()`` (and/or
     ``observe=True``) to record per-event spans on one track per lane plus a
-    shared engine track, per-lane barrier intervals, and per-job
-    arrival→scheduled latency histograms (merged per scenario into
-    ``latency.events``). The runtime re-points each lane scheduler's
-    ``tracer``/``metrics``/``trace_track`` and the engine's ``tracer``; with
-    neither flag the schedulers keep their null objects and the run is
-    byte-identical to an unobserved one (the fleet benchmark's ``latency``
-    section measures the enabled overhead at <5%).
+    shared engine track, per-lane barrier (or per-entry ``queue/wait``)
+    intervals, and per-job arrival→scheduled latency histograms (merged per
+    scenario into ``latency.events``). The runtime re-points each lane
+    scheduler's ``tracer``/``metrics``/``trace_track`` and the engine's
+    ``tracer``; with neither flag the schedulers keep their null objects and
+    the run is byte-identical to an unobserved one (the fleet benchmark's
+    ``latency`` section measures the enabled overhead at <5%).
     """
 
     def __init__(
         self,
         engine: JRBAEngine | None = None,
         *,
+        mode: str | None = None,
         tracer: Tracer | None = None,
         observe: bool = False,
+        batch_target: int = 32,
+        deadline_s: float = 0.002,
     ) -> None:
+        if mode is None:
+            mode = os.environ.get("REPRO_FLEET_RUNTIME", "lockstep")
+        if mode not in FLEET_RUNTIMES:
+            raise ValueError(
+                f"unknown fleet runtime {mode!r}; one of {FLEET_RUNTIMES} "
+                "(check REPRO_FLEET_RUNTIME if mode= was not passed)"
+            )
+        self.mode = mode
         self.engine = engine
         self.tracer = tracer
         self.observe = observe
+        # async knobs (inert under lockstep): fire a bucket at batch_target
+        # entries, or as soon as its oldest entry has waited deadline_s.
+        # deadline_s=0 degenerates to strict FIFO (every head is instantly
+        # overdue); deadline_s=inf to pure fill-then-flush — both exercised
+        # by the dispatcher unit tests.
+        self.batch_target = batch_target
+        self.deadline_s = deadline_s
 
     def run(self, sims: list[FleetSim]) -> FleetResult:
         if not sims:
@@ -215,15 +340,131 @@ class FleetRuntime:
             _Lane(sim=s, gen=s.scheduler.step(s.events, max_time=s.max_time), idx=i)
             for i, s in enumerate(sims)
         ]
+        for lane in lanes:  # prime: advance to the first solve (or completion)
+            self._advance(lane, None)
+        if self.mode == "async":
+            (
+                lane_own,
+                lane_stall,
+                lane_wall,
+                total_dispatch,
+                queue_block,
+                n_requests,
+            ) = self._drive_async(lanes, engine, telemetry, tracer, hits0, misses0)
+        else:
+            lane_own, lane_stall, lane_wall, total_dispatch = self._drive_lockstep(
+                lanes, engine, telemetry, tracer, hits0, misses0
+            )
+            queue_block, n_requests = None, None
+        wall = time.perf_counter() - t_start
+        results = [ln.result for ln in lanes]
+        stats1 = dataclasses.asdict(engine.stats)
+        # engine phase breakdown for THIS run: where the flat solve time
+        # actually went (host build, cache replay, device dispatch, rounding)
+        solver_phases = {
+            key: stats1[key] - solver0[key]
+            for key in (
+                "build_seconds",
+                "cache_seconds",
+                "dispatch_seconds",
+                "finalize_seconds",
+            )
+        }
+        total_stall = sum(lane_stall)
+        total_lane_wall = sum(lane_wall)
+        events_block = None
+        if lane_metrics is not None:
+            overall = StreamingHistogram()
+            by_scenario: dict[str, StreamingHistogram] = {}
+            for s, reg in zip(sims, lane_metrics):
+                h = reg.histograms.get("event_latency_s")
+                if h is None:
+                    continue
+                overall.merge(h)
+                by_scenario.setdefault(s.name or "sim", StreamingHistogram()).merge(h)
+            events_block = {
+                "overall": overall.snapshot(),
+                "by_scenario": {
+                    k: v.snapshot() for k, v in sorted(by_scenario.items())
+                },
+            }
+        latency = {
+            # shared-dispatch wait attribution, both modes (see class
+            # docstring): stall is barrier wait under lockstep, queue wait
+            # under async — same shape so stall recovery is a direct diff
+            "barrier": {
+                "dispatch_seconds": total_dispatch,
+                "own_solve_seconds": sum(lane_own),
+                "stall_seconds": total_stall,
+                # fraction of total lane wait that was stall: 0 for a single
+                # lockstep lane, -> (n-1)/n when every lane waits a full
+                # dispatch on everyone else
+                "stall_fraction": (
+                    total_stall / total_lane_wall if total_lane_wall else 0.0
+                ),
+                "per_lane": [
+                    {
+                        "lane": i,
+                        "name": s.name or "sim",
+                        "own_seconds": lane_own[i],
+                        "stall_seconds": lane_stall[i],
+                        "wall_seconds": lane_wall[i],
+                        "stall_fraction": (
+                            lane_stall[i] / lane_wall[i] if lane_wall[i] else 0.0
+                        ),
+                    }
+                    for i, s in enumerate(sims)
+                ],
+            },
+            # async dispatcher internals (fire causes, queue-wait
+            # percentiles, knobs); None under lockstep
+            "queue": queue_block,
+            # per-job arrival->scheduled wall latency, merged per scenario;
+            # None unless the run observed (tracer enabled or observe=True)
+            "events": events_block,
+            "solver_phases": solver_phases,
+        }
+        telemetry.finalize(
+            names=[s.name for s in sims],
+            results=results,
+            wall_seconds=wall,
+            solver={
+                "mode": engine.solver,
+                **{
+                    key: stats1[key] - solver0[key]
+                    for key in (
+                        "solver_steps",
+                        "solver_step_budget",
+                        "fast_path_solves",
+                        "prog_cache_hits",
+                        "prog_cache_misses",
+                    )
+                },
+                "phases": solver_phases,
+            },
+            latency=latency,
+            runtime=self.mode,
+            n_requests=n_requests,
+        )
+        return FleetResult(results=results, telemetry=telemetry, wall_seconds=wall)
+
+    # -- lockstep driver ------------------------------------------------------
+    def _drive_lockstep(
+        self,
+        lanes: list[_Lane],
+        engine: JRBAEngine,
+        telemetry: FleetTelemetry,
+        tracer: Tracer,
+        hits0: int,
+        misses0: int,
+    ) -> tuple[list[float], list[float], list[float], float]:
         # per-lane barrier accounting (always on — pure arithmetic): own
         # solve share, attributed stall, and the dispatch wall-clock of the
         # rounds the lane was live in (own + stall == wall per lane)
-        lane_own = [0.0] * len(sims)
-        lane_stall = [0.0] * len(sims)
-        lane_wall = [0.0] * len(sims)
+        lane_own = [0.0] * len(lanes)
+        lane_stall = [0.0] * len(lanes)
+        lane_wall = [0.0] * len(lanes)
         total_dispatch = 0.0
-        for lane in lanes:  # prime: advance to the first solve (or completion)
-            self._advance(lane, None)
         round_idx = 0
         while True:
             live = [ln for ln in lanes if ln.result is None]
@@ -306,89 +547,201 @@ class FleetRuntime:
                 )
             )
             round_idx += 1
-        wall = time.perf_counter() - t_start
-        results = [ln.result for ln in lanes]
-        stats1 = dataclasses.asdict(engine.stats)
-        # engine phase breakdown for THIS run: where the flat solve time
-        # actually went (host build, cache replay, device dispatch, rounding)
-        solver_phases = {
-            key: stats1[key] - solver0[key]
-            for key in (
-                "build_seconds",
-                "cache_seconds",
-                "dispatch_seconds",
-                "finalize_seconds",
+        return lane_own, lane_stall, lane_wall, total_dispatch
+
+    # -- async driver ---------------------------------------------------------
+    def _drive_async(
+        self,
+        lanes: list[_Lane],
+        engine: JRBAEngine,
+        telemetry: FleetTelemetry,
+        tracer: Tracer,
+        hits0: int,
+        misses0: int,
+    ) -> tuple[list[float], list[float], list[float], float, dict, int]:
+        lane_own = [0.0] * len(lanes)
+        lane_stall = [0.0] * len(lanes)
+        lane_wall = [0.0] * len(lanes)
+        total_dispatch = 0.0
+        # per-shape-bucket FIFO queues; a deque is dropped from the dict the
+        # moment it drains so the scheduling rules only ever scan live buckets
+        queues: dict[tuple, collections.deque[_QueueEntry]] = {}
+        # rounds whose every part is done, waiting to resume their lane (in
+        # lane order per dispatch — the one ordering decision the dispatcher
+        # makes that the engine's composition independence doesn't cover)
+        ready: collections.deque[_InFlight] = collections.deque()
+        fired_by = {"fill": 0, "deadline": 0, "flush": 0}
+        wait_hist = StreamingHistogram()
+        seq = 0
+        n_requests = 0
+        dispatch_idx = 0
+
+        def enqueue(lane: _Lane) -> None:
+            """Fan the lane's pending round out across the bucket queues;
+            empty-bucket solves (programs the engine would never see) are
+            answered None on the spot. An all-empty round is ready
+            immediately."""
+            nonlocal seq, n_requests
+            req = lane.pending
+            now = time.perf_counter()
+            inflight = _InFlight(
+                lane=lane,
+                solves=req.solves,
+                results=[None] * len(req.solves),
+                remaining=len(req.solves),
+                enqueue_ts=now,
             )
-        }
-        total_stall = sum(lane_stall)
-        total_lane_wall = sum(lane_wall)
-        events_block = None
-        if lane_metrics is not None:
-            overall = StreamingHistogram()
-            by_scenario: dict[str, StreamingHistogram] = {}
-            for s, reg in zip(sims, lane_metrics):
-                h = reg.histograms.get("event_latency_s")
-                if h is None:
+            real = False
+            for pos, s in enumerate(req.solves):
+                key = s.bucket if s.bucket is not None else ("unbucketed",)
+                if key == ("empty",):
+                    inflight.remaining -= 1  # result stays None, zero cost
                     continue
-                overall.merge(h)
-                by_scenario.setdefault(s.name or "sim", StreamingHistogram()).merge(h)
-            events_block = {
-                "overall": overall.snapshot(),
-                "by_scenario": {
-                    k: v.snapshot() for k, v in sorted(by_scenario.items())
-                },
-            }
-        latency = {
-            "barrier": {
-                "dispatch_seconds": total_dispatch,
-                "own_solve_seconds": sum(lane_own),
-                "stall_seconds": total_stall,
-                # fraction of total lane-time behind the barrier that was
-                # stall: 0 for a single lane, -> (n-1)/n when every lane
-                # waits a full dispatch on everyone else
-                "stall_fraction": (
-                    total_stall / total_lane_wall if total_lane_wall else 0.0
-                ),
-                "per_lane": [
-                    {
-                        "lane": i,
-                        "name": s.name or "sim",
-                        "own_seconds": lane_own[i],
-                        "stall_seconds": lane_stall[i],
-                        "wall_seconds": lane_wall[i],
-                        "stall_fraction": (
-                            lane_stall[i] / lane_wall[i] if lane_wall[i] else 0.0
-                        ),
-                    }
-                    for i, s in enumerate(sims)
-                ],
-            },
-            # per-job arrival->scheduled wall latency, merged per scenario;
-            # None unless the run observed (tracer enabled or observe=True)
-            "events": events_block,
-            "solver_phases": solver_phases,
-        }
-        telemetry.finalize(
-            names=[s.name for s in sims],
-            results=results,
-            wall_seconds=wall,
-            solver={
-                "mode": engine.solver,
-                **{
-                    key: stats1[key] - solver0[key]
-                    for key in (
-                        "solver_steps",
-                        "solver_step_budget",
-                        "fast_path_solves",
-                        "prog_cache_hits",
-                        "prog_cache_misses",
+                real = True
+                queues.setdefault(key, collections.deque()).append(
+                    _QueueEntry(inflight, pos, seq, now)
+                )
+                seq += 1
+            n_requests += real
+            if inflight.remaining == 0:
+                ready.append(inflight)
+
+        def drain_ready() -> None:
+            """Resume every completed round's lane; a resumed lane either
+            finishes or enqueues its next round (which may itself be ready —
+            the loop, not recursion, absorbs arbitrarily long chains of
+            empty rounds)."""
+            while ready:
+                inflight = ready.popleft()
+                lane = inflight.lane
+                wall = time.perf_counter() - inflight.enqueue_ts
+                lane_wall[lane.idx] += wall
+                lane_own[lane.idx] += inflight.own_seconds
+                # no clamp: own <= wall by construction (every dispatch this
+                # round rode ran inside its enqueue->answer window), so
+                # own + stall == wall holds exactly, as under lockstep
+                lane_stall[lane.idx] += wall - inflight.own_seconds
+                self._advance(lane, (inflight.results, inflight.own_seconds))
+                if lane.result is None:
+                    enqueue(lane)
+
+        for lane in lanes:
+            if lane.result is None:
+                enqueue(lane)
+        drain_ready()
+        while queues:
+            now = time.perf_counter()
+            # scheduling rules, in priority order: (1) a bucket whose head
+            # has waited past the deadline fires first — oldest head wins, so
+            # the latency bound is honored across buckets; (2) a full bucket
+            # fires for throughput — fullest first, oldest head breaking
+            # ties; (3) otherwise nothing is urgent or full, so flush the
+            # oldest head rather than idle (no timers exist to wait on — the
+            # driver is the only source of progress). Rule 3 is also the
+            # no-starvation guarantee: a lone odd-shaped lane's bucket never
+            # fills, but its head becomes the oldest once its elders drain.
+            overdue = [
+                k for k, q in queues.items() if now - q[0].ts >= self.deadline_s
+            ]
+            if overdue:
+                key = min(overdue, key=lambda k: queues[k][0].seq)
+                cause = "deadline"
+            else:
+                full = [k for k, q in queues.items() if len(q) >= self.batch_target]
+                if full:
+                    key = max(full, key=lambda k: (len(queues[k]), -queues[k][0].seq))
+                    cause = "fill"
+                else:
+                    key = min(queues, key=lambda k: queues[k][0].seq)
+                    cause = "flush"
+            depth = sum(len(q) for q in queues.values())
+            q = queues[key]
+            take = [q.popleft() for _ in range(min(self.batch_target, len(q)))]
+            if not q:
+                del queues[key]
+            fired_by[cause] += 1
+            solves = [e.inflight.solves[e.pos] for e in take]
+            stats = engine.stats
+            calls0, inst0, solve0 = (
+                stats.batched_solves,
+                stats.batched_instances,
+                stats.solve_seconds,
+            )
+            t0 = time.perf_counter()
+            outs = engine.solve_many(
+                [s.net for s in solves],
+                [s.flows for s in solves],
+                capacities=[s.capacity for s in solves],
+                water_filling=[s.water_filling for s in solves],
+            )
+            dispatch_seconds = time.perf_counter() - t0
+            total_dispatch += dispatch_seconds
+            per_solve = dispatch_seconds / len(take)
+            waits = []
+            done: list[_InFlight] = []
+            for e, out in zip(take, outs):
+                inflight = e.inflight
+                inflight.results[e.pos] = out
+                inflight.own_seconds += per_solve
+                inflight.remaining -= 1
+                w = t0 - e.ts
+                waits.append(w)
+                wait_hist.observe(w)
+                if tracer.enabled:
+                    # drawn on the shared engine track, ending where the
+                    # dispatch began: the wait this entry spent queued
+                    tracer.complete(
+                        "queue/wait",
+                        track=engine.trace_track,
+                        cat="queue",
+                        ts=tracer.now() - dispatch_seconds - w,
+                        dur=w,
+                        bucket=str(key),
+                        lane=inflight.lane.idx,
+                        dispatch=dispatch_idx,
                     )
-                },
-                "phases": solver_phases,
-            },
-            latency=latency,
-        )
-        return FleetResult(results=results, telemetry=telemetry, wall_seconds=wall)
+                if inflight.remaining == 0:
+                    done.append(inflight)
+            batch_calls = stats.batched_solves - calls0
+            telemetry.record_dispatch(
+                DispatchRecord(
+                    dispatch=dispatch_idx,
+                    bucket=str(key),
+                    fired_by=cause,
+                    n_solves=len(take),
+                    n_lanes=len({id(e.inflight) for e in take}),
+                    queue_depth=depth,
+                    batch_calls=batch_calls,
+                    batch_occupancy=(
+                        (stats.batched_instances - inst0) / batch_calls
+                        if batch_calls
+                        else 0.0
+                    ),
+                    solve_seconds=stats.solve_seconds - solve0,
+                    dispatch_seconds=dispatch_seconds,
+                    queue_wait_mean=sum(waits) / len(waits),
+                    queue_wait_max=max(waits),
+                    cache_hits=stats.cache_hits - hits0,
+                    cache_misses=stats.cache_misses - misses0,
+                )
+            )
+            dispatch_idx += 1
+            # resume completed rounds in lane order (deterministic regardless
+            # of queue interleaving), each enqueueing its next round before
+            # the dispatcher picks again
+            for inflight in sorted(done, key=lambda i: i.lane.idx):
+                ready.append(inflight)
+            drain_ready()
+        queue_block = {
+            "dispatches": dispatch_idx,
+            "fired_by": dict(fired_by),
+            "batch_target": self.batch_target,
+            "deadline_s": self.deadline_s,
+            # per-entry enqueue->fire wait distribution (the deadline rule's
+            # subject); p99 here is the dispatcher's latency SLO readout
+            "wait": wait_hist.snapshot(),
+        }
+        return lane_own, lane_stall, lane_wall, total_dispatch, queue_block, n_requests
 
     @staticmethod
     def _advance(lane: _Lane, reply: tuple | None) -> None:
@@ -397,3 +750,28 @@ class FleetRuntime:
             lane.pending = lane.gen.send(reply)
         except StopIteration as stop:
             lane.pending, lane.result = None, stop.value
+
+
+class AsyncFleetRuntime(FleetRuntime):
+    """:class:`FleetRuntime` pinned to the async continuous-batching driver,
+    regardless of ``REPRO_FLEET_RUNTIME`` — for call sites that specifically
+    want the queue semantics (the async benchmark section, the dispatcher
+    unit tests) rather than the environment's default."""
+
+    def __init__(
+        self,
+        engine: JRBAEngine | None = None,
+        *,
+        tracer: Tracer | None = None,
+        observe: bool = False,
+        batch_target: int = 32,
+        deadline_s: float = 0.002,
+    ) -> None:
+        super().__init__(
+            engine,
+            mode="async",
+            tracer=tracer,
+            observe=observe,
+            batch_target=batch_target,
+            deadline_s=deadline_s,
+        )

@@ -1,11 +1,14 @@
-"""Fleet telemetry: per-dispatch-round metrics and a JSON-lines trace.
+"""Fleet telemetry: per-dispatch metrics and a JSON-lines trace.
 
-Every lockstep round the runtime records how well cross-simulation batching
-worked (requests in flight, compiled batch calls, occupancy), what the solver
-cost, and where the compile cache stands (`EngineStats` hits/misses). On
-completion a summary aggregates simulator throughput (events/sec) and
-per-scenario job throughput. ``to_jsonl`` dumps the whole trace — one round
-per line plus a terminal summary line — for offline analysis.
+The lockstep runtime records one :class:`RoundRecord` per barrier round; the
+async continuous-batching runtime records one :class:`DispatchRecord` per
+queue fire (which bucket, why it fired, how long its entries waited). Both
+capture how well cross-simulation batching worked (compiled batch calls,
+occupancy), what the solver cost, and where the compile cache stands
+(`EngineStats` hits/misses). On completion a summary aggregates simulator
+throughput (events/sec) and per-scenario job throughput — uniformly over
+whichever record kind the run produced. ``to_jsonl`` dumps the whole trace —
+one record per line plus a terminal summary line — for offline analysis.
 """
 from __future__ import annotations
 
@@ -21,7 +24,7 @@ from ..obs.trace import dumps_strict as _dumps_strict
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard for type hints only
     from ..core.online import SimResult
 
-__all__ = ["RoundRecord", "FleetTelemetry"]
+__all__ = ["DispatchRecord", "RoundRecord", "FleetTelemetry"]
 
 
 @dataclasses.dataclass
@@ -62,16 +65,57 @@ class RoundRecord:
         return dataclasses.asdict(self)
 
 
+@dataclasses.dataclass
+class DispatchRecord:
+    """One continuous-batching dispatch of the async fleet runtime: the
+    queue fire that took up to ``batch_target`` entries from one shape
+    bucket and ran them through a single ``solve_many`` call."""
+
+    dispatch: int
+    bucket: str  # the shape-bucket key fired (str of the engine's bucket_key)
+    # why the dispatcher fired this bucket: "fill" (reached batch_target),
+    # "deadline" (its head waited past deadline_s), or "flush" (nothing full
+    # or expired — drain the oldest head so the fleet always makes progress)
+    fired_by: str
+    n_solves: int  # entries taken from the bucket (== programs dispatched)
+    n_lanes: int  # distinct lanes those entries belong to
+    # total entries queued across ALL buckets when this dispatch fired —
+    # backlog pressure at fire time (n_solves of them were drained)
+    queue_depth: int
+    batch_calls: int  # compiled batch dispatches (shape groups) in the call
+    batch_occupancy: float  # batched instances per compiled call
+    solve_seconds: float  # solver time inside the engine this dispatch
+    dispatch_seconds: float  # wall-clock of the whole solve_many call
+    # queue wait of the entries this dispatch drained: enqueue -> fire, the
+    # latency the deadline rule bounds (the per-entry distribution feeds the
+    # summary's latency.queue.wait percentiles)
+    queue_wait_mean: float
+    queue_wait_max: float
+    # cumulative EngineStats counters for THIS run (deltas from run start,
+    # same convention as RoundRecord)
+    cache_hits: int
+    cache_misses: int
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
 class FleetTelemetry:
-    """Accumulates :class:`RoundRecord` rows plus a completion summary."""
+    """Accumulates :class:`RoundRecord` (lockstep) or :class:`DispatchRecord`
+    (async) rows plus a completion summary. One run produces one kind; the
+    derived metrics aggregate over both lists so callers never branch."""
 
     def __init__(self) -> None:
         self.rounds: list[RoundRecord] = []
+        self.dispatches: list[DispatchRecord] = []
         self.summary: dict = {}
 
     # -- recording -----------------------------------------------------------
     def record_round(self, record: RoundRecord) -> None:
         self.rounds.append(record)
+
+    def record_dispatch(self, record: DispatchRecord) -> None:
+        self.dispatches.append(record)
 
     def finalize(
         self,
@@ -81,13 +125,20 @@ class FleetTelemetry:
         wall_seconds: float,
         solver: dict | None = None,
         latency: dict | None = None,
+        runtime: str = "lockstep",
+        n_requests: int | None = None,
     ) -> dict:
         """Aggregate per-scenario throughput and fleet-level rates. ``names``
         groups simulations (several fleet lanes may share one scenario name).
         ``latency`` is the runtime-built observability block (barrier-stall
         attribution, event-latency percentiles, solver phase split) and is
-        surfaced verbatim; None when the caller has no latency data."""
+        surfaced verbatim; None when the caller has no latency data.
+        ``runtime`` tags which driver produced the records; ``n_requests``
+        is the lane-round count for drivers without round records (the async
+        runtime counts rounds at enqueue time), None to derive it from
+        ``self.rounds``."""
         total_events = sum(r.n_events for r in results)
+        recs = [*self.rounds, *self.dispatches]
         by_name: dict[str, list] = {}
         for name, res in zip(names, results):
             by_name.setdefault(name or "sim", []).append(res)
@@ -95,14 +146,20 @@ class FleetTelemetry:
         spec_repaired = sum(r.spec_repaired for r in results)
         churn_events = sum(r.churn_events for r in results)
         self.summary = {
+            "runtime": runtime,
             "n_sims": len(results),
             "n_rounds": len(self.rounds),
-            "n_requests": sum(r.n_requests for r in self.rounds),
-            "n_solves": sum(r.n_solves for r in self.rounds),
-            "batch_calls": sum(r.batch_calls for r in self.rounds),
+            "n_dispatches": len(self.dispatches),
+            "n_requests": (
+                n_requests
+                if n_requests is not None
+                else sum(r.n_requests for r in self.rounds)
+            ),
+            "n_solves": sum(r.n_solves for r in recs),
+            "batch_calls": sum(r.batch_calls for r in recs),
             "mean_batch_occupancy": self.mean_batch_occupancy,
             "cache_hit_rate": self.cache_hit_rate,
-            "solve_seconds": sum(r.solve_seconds for r in self.rounds),
+            "solve_seconds": sum(r.solve_seconds for r in recs),
             "wall_seconds": wall_seconds,
             "events": total_events,
             "events_per_s": total_events / wall_seconds if wall_seconds else None,
@@ -174,21 +231,26 @@ class FleetTelemetry:
         """Instances per compiled batch call, over the whole run. The whole
         point of co-scheduling: >1 means independent simulations actually
         shared compiled solves."""
-        calls = sum(r.batch_calls for r in self.rounds)
-        instances = sum(r.batch_occupancy * r.batch_calls for r in self.rounds)
+        recs = [*self.rounds, *self.dispatches]
+        calls = sum(r.batch_calls for r in recs)
+        instances = sum(r.batch_occupancy * r.batch_calls for r in recs)
         return instances / calls if calls else 0.0
 
     @property
     def cache_hit_rate(self) -> float:
-        if not self.rounds:
+        # cache counters are cumulative per record, so the last record of
+        # whichever kind the run produced carries the run totals
+        recs = self.rounds or self.dispatches
+        if not recs:
             return 0.0
-        last = self.rounds[-1]
+        last = recs[-1]
         total = last.cache_hits + last.cache_misses
         return last.cache_hits / total if total else 0.0
 
     # -- export ---------------------------------------------------------------
     def to_jsonl(self, path: str) -> None:
-        """One ``{"type": "round", ...}`` line per dispatch round, then a
+        """One ``{"type": "round", ...}`` line per lockstep round (or one
+        ``{"type": "dispatch", ...}`` line per async queue fire), then a
         final ``{"type": "summary", ...}`` line.
 
         Strict RFC 8259 output: summary metrics can be non-finite (e.g. an
@@ -200,4 +262,6 @@ class FleetTelemetry:
         with open(path, "w") as f:
             for r in self.rounds:
                 f.write(_dumps_strict({"type": "round", **r.as_dict()}) + "\n")
+            for d in self.dispatches:
+                f.write(_dumps_strict({"type": "dispatch", **d.as_dict()}) + "\n")
             f.write(_dumps_strict({"type": "summary", **self.summary}) + "\n")

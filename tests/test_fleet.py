@@ -1,6 +1,12 @@
 """Fleet co-scheduling runtime: lockstep batching must reproduce independent
 ``OnlineScheduler.run`` results while actually sharing compiled solves, and
-the stepper/solve_many extensions it rests on must hold on their own."""
+the stepper/solve_many extensions it rests on must hold on their own.
+
+The equivalence tests construct ``FleetRuntime()`` without a ``mode=``, so
+the ``REPRO_FLEET_RUNTIME=async`` CI leg re-runs them through the continuous-
+batching driver (same records either way — that is the contract). Tests that
+assert *round-record* semantics pin ``mode="lockstep"``; the async driver's
+own dispatch records are covered in ``test_fleet_async.py``."""
 import numpy as np
 import pytest
 
@@ -79,7 +85,11 @@ def test_fleet_telemetry_trace(tmp_path):
     import json
 
     shared = JRBAEngine(k=3, n_iters=80)
-    fleet = FleetRuntime(shared).run(_build_fleet(4, engine=shared, n_jobs=2))
+    # pinned: the round-record layout and the per-round barrier identity
+    # below are lockstep-specific (async produces "dispatch" records)
+    fleet = FleetRuntime(shared, mode="lockstep").run(
+        _build_fleet(4, engine=shared, n_jobs=2)
+    )
     path = tmp_path / "trace.jsonl"
     fleet.telemetry.to_jsonl(str(path))
     lines = [json.loads(line) for line in path.read_text().splitlines()]

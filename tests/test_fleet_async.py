@@ -1,0 +1,209 @@
+"""Async continuous-batching fleet runtime: per-lane records must be
+bit-identical to the lockstep driver on equivalent fleets (the zero-deviation
+discipline every batching layer holds), and the dispatcher's firing rules —
+bucket fill beats deadline, deadline fires partial buckets, oldest-head flush
+prevents starvation — must behave deterministically at their degenerate
+settings (``deadline_s=0`` => strict FIFO, ``deadline_s=inf`` => pure
+fill-then-flush)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import JRBAEngine
+from repro.fleet import (
+    FLEET_RUNTIMES,
+    AsyncFleetRuntime,
+    FleetRuntime,
+    build_async_fleet,
+    build_scenario_fleet,
+)
+from repro.obs import Tracer
+
+
+def _assert_records_identical(results_a, results_b):
+    """Bitwise equality of every lane's scheduling outcome."""
+    assert len(results_a) == len(results_b)
+    for a, b in zip(results_a, results_b):
+        assert len(a.records) == len(b.records)
+        for ra, rb in zip(a.records, b.records):
+            assert ra.schedule_time == rb.schedule_time
+            assert ra.finish_time == rb.finish_time
+        assert a.unfinished == b.unfinished
+        assert a.n_events == b.n_events
+
+
+def _run_both(build, *, n_iters=40, **async_kwargs):
+    """Run the same fleet under lockstep and async (fresh builds + engines,
+    so no mutable network or cache state leaks between the passes)."""
+    lock_eng = JRBAEngine(k=2, n_iters=n_iters)
+    lock = FleetRuntime(lock_eng, mode="lockstep").run(build(lock_eng))
+    async_eng = JRBAEngine(k=2, n_iters=n_iters)
+    asyn = AsyncFleetRuntime(async_eng, **async_kwargs).run(build(async_eng))
+    return lock, asyn
+
+
+# -- record equivalence -------------------------------------------------------
+
+
+def test_async_matches_lockstep_static_fleet():
+    lock, asyn = _run_both(
+        lambda eng: build_scenario_fleet(eng, 6, n_jobs=2),
+        batch_target=4,
+        deadline_s=0.001,
+    )
+    _assert_records_identical(lock.results, asyn.results)
+    assert lock.telemetry.summary["runtime"] == "lockstep"
+    assert asyn.telemetry.summary["runtime"] == "async"
+    # async produced dispatch records, not rounds — and actually batched
+    assert asyn.telemetry.dispatches and not asyn.telemetry.rounds
+    assert asyn.telemetry.summary["n_dispatches"] == len(asyn.telemetry.dispatches)
+    assert asyn.telemetry.summary["n_solves"] == sum(
+        d.n_solves for d in asyn.telemetry.dispatches
+    )
+
+
+def test_async_matches_lockstep_mixed_churn_fleet():
+    """The ISSUE's headline workload in miniature: scenario lanes where every
+    4th carries a capacity-drift churn trace. Records must stay bitwise equal
+    through mid-flight re-solves and out-of-order dispatch completion."""
+    lock, asyn = _run_both(
+        lambda eng: build_async_fleet(eng, 8, n_jobs=2, churn_every=4),
+        batch_target=4,
+        deadline_s=0.001,
+    )
+    _assert_records_identical(lock.results, asyn.results)
+    churn = asyn.telemetry.summary["churn"]
+    assert churn is not None and churn["events"] > 0  # churn lanes were live
+    assert churn == lock.telemetry.summary["churn"]
+
+
+# -- dispatcher firing rules --------------------------------------------------
+
+
+def test_bucket_fill_fires_before_deadline():
+    """With an infinite deadline, a bucket holding batch_target entries fires
+    on the fill rule — and takes exactly batch_target entries."""
+    eng = JRBAEngine(k=2, n_iters=30)
+    # one scenario family => seed-independent L => every lane's first-round
+    # solve lands in the same (Nf, K, L) bucket: 8 entries queue before the
+    # first fire, exceeding batch_target
+    sims = build_scenario_fleet(eng, 8, n_jobs=2, names=("edge-mesh",))
+    rt = AsyncFleetRuntime(eng, batch_target=4, deadline_s=float("inf"))
+    result = rt.run(sims)
+    first = result.telemetry.dispatches[0]
+    assert first.fired_by == "fill"
+    assert first.n_solves == 4
+    fired = result.telemetry.summary["latency"]["queue"]["fired_by"]
+    assert fired["deadline"] == 0  # inf deadline can never expire
+    assert fired["fill"] >= 1
+    assert result.unfinished == 0
+
+
+def test_deadline_fires_partial_buckets():
+    """deadline_s=0 makes every queue head instantly overdue: all dispatches
+    fire on the deadline rule in strict oldest-head order, well below the
+    (unreachable) batch_target — and records still match lockstep."""
+    lock, asyn = _run_both(
+        lambda eng: build_scenario_fleet(eng, 4, n_jobs=2),
+        batch_target=10**6,
+        deadline_s=0.0,
+    )
+    _assert_records_identical(lock.results, asyn.results)
+    fired = asyn.telemetry.summary["latency"]["queue"]["fired_by"]
+    assert fired["fill"] == 0 and fired["flush"] == 0
+    assert fired["deadline"] == asyn.telemetry.summary["n_dispatches"] > 0
+    assert all(d.fired_by == "deadline" for d in asyn.telemetry.dispatches)
+
+
+def test_no_starvation_of_odd_shaped_lane():
+    """A lone lane whose shape bucket can never reach batch_target must still
+    complete: the flush rule drains the oldest head when nothing is full or
+    overdue. Six edge-mesh lanes keep their bucket busy while one fat-tree
+    lane (different L) sits alone in its own bucket."""
+    eng = JRBAEngine(k=2, n_iters=30)
+    sims = build_scenario_fleet(eng, 6, n_jobs=2, names=("edge-mesh",))
+    sims += build_scenario_fleet(eng, 1, n_jobs=2, names=("fat-tree",), seed0=50)
+    rt = AsyncFleetRuntime(eng, batch_target=4, deadline_s=float("inf"))
+    result = rt.run(sims)
+    odd = result.results[-1]
+    assert odd.n_scheduled > 0 and odd.unfinished == 0
+    buckets = {d.bucket for d in result.telemetry.dispatches}
+    assert len(buckets) >= 2  # the odd lane's private bucket did fire
+    assert result.telemetry.summary["latency"]["queue"]["fired_by"]["flush"] >= 1
+
+
+# -- mode selection -----------------------------------------------------------
+
+
+def test_mode_selection(monkeypatch):
+    monkeypatch.delenv("REPRO_FLEET_RUNTIME", raising=False)
+    assert FleetRuntime().mode == "lockstep"  # default
+    monkeypatch.setenv("REPRO_FLEET_RUNTIME", "async")
+    assert FleetRuntime().mode == "async"  # env flips the default
+    assert FleetRuntime(mode="lockstep").mode == "lockstep"  # kwarg wins
+    monkeypatch.setenv("REPRO_FLEET_RUNTIME", "lockstep")
+    assert AsyncFleetRuntime().mode == "async"  # subclass pins async
+    monkeypatch.setenv("REPRO_FLEET_RUNTIME", "bogus")
+    with pytest.raises(ValueError, match="bogus"):
+        FleetRuntime()
+    with pytest.raises(ValueError, match="threaded"):
+        FleetRuntime(mode="threaded")
+    assert set(FLEET_RUNTIMES) == {"lockstep", "async"}
+
+
+# -- telemetry, tracing, attribution ------------------------------------------
+
+
+def test_async_jsonl_trace_and_queue_spans(tmp_path):
+    """The async JSONL trace is strict RFC-8259 with one dispatch line per
+    queue fire; the tracer carries one queue/wait interval per dispatched
+    solve on the engine track; and the stall attribution conserves
+    wall-clock exactly (own + stall == wall per lane, summed own == summed
+    dispatch seconds, no negative stall)."""
+    eng = JRBAEngine(k=2, n_iters=40)
+    tracer = Tracer()
+    rt = AsyncFleetRuntime(eng, tracer=tracer, batch_target=4, deadline_s=0.001)
+    result = rt.run(build_async_fleet(eng, 6, n_jobs=2, churn_every=3))
+    path = tmp_path / "trace.jsonl"
+    result.telemetry.to_jsonl(str(path))
+
+    def reject(const):
+        raise AssertionError(f"non-RFC JSON constant {const!r}")
+
+    lines = [
+        json.loads(line, parse_constant=reject)
+        for line in path.read_text().splitlines()
+    ]
+    assert [ln["type"] for ln in lines[:-1]] == ["dispatch"] * (len(lines) - 1)
+    summary = lines[-1]
+    assert summary["type"] == "summary" and summary["runtime"] == "async"
+    assert summary["n_dispatches"] == len(lines) - 1
+    for rec in lines[:-1]:
+        assert rec["fired_by"] in ("fill", "deadline", "flush")
+        assert 1 <= rec["n_lanes"] <= rec["n_solves"] <= rec["queue_depth"]
+        assert rec["queue_wait_max"] >= rec["queue_wait_mean"] >= 0.0
+
+    # queue-wait spans: one per dispatched solve, on the engine track
+    waits = [
+        e
+        for e in tracer.events
+        if e.get("ph") == "X" and e.get("name") == "queue/wait"
+    ]
+    assert len(waits) == sum(d.n_solves for d in result.telemetry.dispatches)
+
+    # conservation (same contract the lockstep barrier test pins)
+    barrier = result.telemetry.summary["latency"]["barrier"]
+    for row in barrier["per_lane"]:
+        assert row["own_seconds"] + row["stall_seconds"] == pytest.approx(
+            row["wall_seconds"], rel=1e-9, abs=1e-12
+        )
+        assert row["stall_seconds"] >= -1e-9
+    assert sum(r["own_seconds"] for r in barrier["per_lane"]) == pytest.approx(
+        barrier["dispatch_seconds"], rel=1e-9
+    )
+    queue = result.telemetry.summary["latency"]["queue"]
+    assert queue["dispatches"] == len(result.telemetry.dispatches)
+    wait = queue["wait"]
+    assert wait["count"] == len(waits)
+    assert np.isfinite(wait["p99"]) and wait["p99"] >= 0.0

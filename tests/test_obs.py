@@ -32,11 +32,14 @@ def _strict_loads(text):
     return json.loads(text, parse_constant=_reject)
 
 
-def _traced_fleet(tmp_path, *, n_sims=4, n_jobs=2):
-    """One small observed fleet run; returns (fleet, tracer, chrome_path)."""
+def _traced_fleet(tmp_path, *, n_sims=4, n_jobs=2, mode=None):
+    """One small observed fleet run; returns (fleet, tracer, chrome_path).
+    ``mode=None`` respects REPRO_FLEET_RUNTIME (so the async CI leg re-runs
+    the mode-agnostic observability tests through the async driver); tests
+    asserting lockstep-only artifacts pass ``mode="lockstep"``."""
     engine = JRBAEngine(k=2, n_iters=60)
     tracer = Tracer()
-    runtime = FleetRuntime(engine, tracer=tracer)
+    runtime = FleetRuntime(engine, tracer=tracer, mode=mode)
     fleet = runtime.run(build_scenario_fleet(engine, n_sims, n_jobs=n_jobs))
     path = tmp_path / "fleet.trace.json"
     tracer.to_chrome(str(path))
@@ -305,7 +308,9 @@ def test_observed_run_is_bit_identical_to_unobserved():
 
 
 def test_trace_report_digests_both_formats(tmp_path):
-    fleet, tracer, chrome_path = _traced_fleet(tmp_path)
+    # pinned: the "barrier attribution" digest reads the lane/own_solve and
+    # lane/barrier_stall spans only the lockstep driver emits
+    fleet, tracer, chrome_path = _traced_fleet(tmp_path, mode="lockstep")
     jsonl_path = tmp_path / "fleet.trace.jsonl"
     fleet.telemetry.to_jsonl(str(jsonl_path))
 
