@@ -5,7 +5,7 @@ vs sequential per-job solves. Emits ``BENCH_fleet.json``.
 
   PYTHONPATH=src python -m benchmarks.fleet [--smoke] [--out BENCH_fleet.json]
 
-Five sections:
+Sections:
 
   * ``scenarios`` — for each registry scenario x policy: jobs scheduled per
     second of scheduler wall-clock, and simulator events per second (the
@@ -44,6 +44,14 @@ Five sections:
     their footprints, batched re-solves must accept speculative solutions,
     and wide churn steps (>= 4 affected jobs) must collapse dispatches by
     >= 1.5x aggregated across seeds.
+  * ``migration`` — the fault-tolerance acceptance on
+    ``edge-mesh-node-chaos`` (permanent correlated node blasts, sources on a
+    protected tier): the migration-off reference must strand >= 1 job across
+    the lane fleet while stall-budget migration finishes every job, and the
+    batched speculate-then-repair migration re-solves must match the
+    sequential migration reference bit-for-bit (record deviation exactly
+    zero); also reports the migrate-or-wait decision split and the
+    data-transfer penalty totals.
   * ``latency`` — the observability acceptance: the cosched fleet run with
     tracing + metrics enabled vs disabled (min-of-repeats each side;
     instrumentation must cost < 5% wall-clock), plus the observables
@@ -89,6 +97,7 @@ from repro.fleet import (  # noqa: E402
     AsyncFleetRuntime,
     FleetRuntime,
     build_async_fleet,
+    build_chaos_fleet,
     build_scenario_fleet,
 )
 from repro.obs import Tracer  # noqa: E402
@@ -695,6 +704,96 @@ def bench_churn_spec(
     return out
 
 
+def bench_migration(
+    *,
+    smoke: bool,
+    scenario: str = "edge-mesh-node-chaos",
+    n_lanes: int = 10,
+    n_jobs: int = 4,
+    stall_budget: float = 1.0,
+) -> dict:
+    """Fault-tolerance acceptance: stall-budget migration under permanent
+    correlated node failures.
+
+    Three sides over the same chaos lane fleet (lane i = scenario seed i):
+    the migration-off reference (``stall_budget=None`` — a job whose
+    placement a blast kills stalls forever, so permanent traces strand it),
+    stall-budget migration with batched speculate-then-repair re-solves, and
+    the sequential migration reference (``speculate=False`` — one dispatch
+    per candidate). The off side must strand >= 1 job across the fleet (the
+    trace is genuinely lethal), both migration sides must finish every job
+    (the liveness claim), and the batched side must reproduce the sequential
+    records bit-for-bit — speculative migration entries are only accepted on
+    exact memory-state + clamp-equal residual matches, so acceptance is
+    exactness, not a tolerance. No timing ratios: migration is a rare-event
+    robustness path, not a throughput path."""
+    if smoke:
+        n_lanes = 5  # seeds 0-4: seed 3 checks-and-backs-off, seed 4 migrates
+    engine = JRBAEngine(k=4, n_iters=60)
+    runtime = FleetRuntime(engine, mode="lockstep")
+
+    def run_side(*, budget, speculate=True):
+        t0 = time.perf_counter()
+        res = runtime.run(
+            build_chaos_fleet(
+                engine,
+                n_lanes,
+                n_jobs=n_jobs,
+                name=scenario,
+                stall_budget=budget,
+                speculate=speculate,
+            )
+        )
+        return res, time.perf_counter() - t0
+
+    off, t_off = run_side(budget=None)
+    seq, t_seq = run_side(budget=stall_budget, speculate=False)
+    spec, t_spec = run_side(budget=stall_budget, speculate=True)
+    max_dev = max_record_dev(seq.results, spec.results)
+
+    def agg(results, field):
+        return sum(getattr(r, field) for r in results)
+
+    checks = agg(spec.results, "migration_checks")
+    migrations = agg(spec.results, "migrations")
+    accepted = agg(spec.results, "migration_spec_accepted")
+    repaired = agg(spec.results, "migration_spec_repaired")
+    out = {
+        "scenario": scenario,
+        "n_lanes": n_lanes,
+        "n_jobs": n_jobs,
+        "stall_budget": stall_budget,
+        "stranded_without_migration": int(off.unfinished),
+        "unfinished_with_migration": int(spec.unfinished),
+        "unfinished_sequential": int(seq.unfinished),
+        "max_record_rel_dev": max_dev,
+        "checks": checks,
+        "migrations": migrations,
+        "rejected": agg(spec.results, "migration_rejected"),
+        "infeasible": agg(spec.results, "migration_infeasible"),
+        "moved_tasks": agg(spec.results, "migration_moved_tasks"),
+        "penalty_seconds": float(agg(spec.results, "migration_penalty_seconds")),
+        "commit_rate": migrations / checks if checks else None,
+        "spec_accepted": accepted,
+        "spec_repaired": repaired,
+        "spec_accept_rate": (
+            accepted / (accepted + repaired) if accepted + repaired else None
+        ),
+        "off_seconds": t_off,
+        "seq_seconds": t_seq,
+        "spec_seconds": t_spec,
+    }
+    print(
+        f"migration[{scenario} {n_lanes}x{n_jobs} jobs] dev={max_dev:.2e} "
+        f"stranded(off)={out['stranded_without_migration']} "
+        f"unfinished(on)={out['unfinished_with_migration']} "
+        f"migrations {migrations}/{checks} checks "
+        f"(rej {out['rejected']}, infeas {out['infeasible']}) "
+        f"penalty {out['penalty_seconds']:.3f}s"
+    )
+    return out
+
+
 def bench_latency(
     *,
     smoke: bool,
@@ -895,6 +994,7 @@ def main() -> None:
         "solver": bench_solver(smoke=args.smoke),
         "churn": bench_churn(smoke=args.smoke),
         "churn_spec": bench_churn_spec(smoke=args.smoke),
+        "migration": bench_migration(smoke=args.smoke),
         "latency": bench_latency(smoke=args.smoke, trace_path=args.trace),
         "fleet_async": bench_fleet_async(
             smoke=args.smoke, trace_path=async_trace_path
@@ -984,6 +1084,26 @@ def main() -> None:
         assert cspec["dispatch_collapse"] and cspec["dispatch_collapse"] >= 1.5, (
             f"wide churn steps collapsed dispatches only "
             f"{cspec['dispatch_collapse'] or 0:.2f}x < 1.5x"
+        )
+        mig = report["migration"]
+        assert mig["stranded_without_migration"] >= 1, (
+            "chaos trace stranded no jobs with migration off — the scenario "
+            "no longer exercises permanent-failure liveness"
+        )
+        assert mig["unfinished_with_migration"] == 0, (
+            f"{mig['unfinished_with_migration']} jobs still stranded with "
+            "stall-budget migration on"
+        )
+        assert mig["unfinished_sequential"] == 0, (
+            f"{mig['unfinished_sequential']} jobs stranded on the sequential "
+            "migration reference"
+        )
+        assert mig["max_record_rel_dev"] == 0.0, (
+            f"batched migration re-solves deviated from sequential records "
+            f"({mig['max_record_rel_dev']:.3e})"
+        )
+        assert mig["migrations"] > 0, (
+            "migration bench never committed a migration"
         )
         lat = report["latency"]
         assert lat["overhead_frac"] is not None and lat["overhead_frac"] < 0.05, (

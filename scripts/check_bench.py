@@ -8,14 +8,17 @@ Two kinds of checks:
 
   * **Correctness caps** (always, including ``--smoke`` reports): the batch
     and cosched span deviations stay within 1%, and the round_batch, solver,
-    churn and fleet_async record deviations stay exactly zero — speculative
-    OTFS must reproduce sequential admissions bit-for-bit, the sparse
-    congestion solver must reproduce dense-reference scheduler records
+    churn, migration and fleet_async record deviations stay exactly zero —
+    speculative OTFS must reproduce sequential admissions bit-for-bit, the
+    sparse congestion solver must reproduce dense-reference scheduler records
     bit-for-bit (including under network churn, where every job must also
-    finish across failure/recovery cycles), and the async continuous-batching
-    runtime must reproduce lockstep records bit-for-bit, at any scale. In
-    non-smoke reports fleet_async additionally needs finite positive
-    events/sec and arrival→scheduled p99 and cross-lane batch occupancy > 1.
+    finish across failure/recovery cycles), batched migration re-solves must
+    reproduce the sequential migration reference bit-for-bit, and the async
+    continuous-batching runtime must reproduce lockstep records bit-for-bit,
+    at any scale. In non-smoke reports fleet_async additionally needs finite
+    positive events/sec and arrival→scheduled p99 and cross-lane batch
+    occupancy > 1, and migration needs the chaos trace to strand >= 1 job
+    with migration off while stall-budget migration strands none.
   * **Regression ratios** (only when BOTH reports are non-smoke, since smoke
     timings are meaningless): every tracked machine-relative metric —
     batch/cosched/round_batch speedups, batch occupancy, dispatch collapse,
@@ -74,10 +77,10 @@ def _ratio_metrics(report: dict, *, absolute: bool = False) -> dict[str, float]:
     # topologies the solver is dispatch-bound (its ~1x ratio swings with
     # host load), and even the compute-dominated wan-mesh-xl ratio moves
     # ~±30% run to run — the acceptance floor is enforced as an absolute
-    # cap in _check_caps instead. The churn and churn_spec sections carry no
-    # timing ratios either: their metrics are deterministic counters, capped
-    # absolutely (record dev == 0, unfinished == 0, counters > 0, dispatch
-    # collapse >= 1.5x) below.
+    # cap in _check_caps instead. The churn, churn_spec and migration
+    # sections carry no timing ratios either: their metrics are deterministic
+    # counters, capped absolutely (record dev == 0, unfinished == 0,
+    # counters > 0, dispatch collapse >= 1.5x) below.
     return out
 
 
@@ -165,6 +168,36 @@ def _check_caps(report: dict, label: str) -> list[str]:
                 f"{label}: churn_spec.dispatch_collapse {collapse:.2f}x < 1.5x "
                 "acceptance floor on wide churn steps"
             )
+    mig = report.get("migration", {})
+    dev = mig.get("max_record_rel_dev")
+    if dev is not None and dev != 0.0:
+        failures.append(
+            f"{label}: migration.max_record_rel_dev {dev:.3e} != 0 "
+            "(batched migration re-solves broke sequential semantics)"
+        )
+    if not report.get("smoke") and mig:
+        # deterministic counters on pinned seeds, floored absolutely (no
+        # timing ratios — migration is a rare-event robustness path): the
+        # chaos trace must genuinely strand jobs with migration off, and
+        # stall-budget migration must rescue every one of them
+        stranded = mig.get("stranded_without_migration")
+        if stranded is not None and stranded < 1:
+            failures.append(
+                f"{label}: migration.stranded_without_migration == {stranded} "
+                "(chaos trace no longer lethal — liveness claim untested)"
+            )
+        for field in ("unfinished_with_migration", "unfinished_sequential"):
+            unfinished = mig.get(field)
+            if unfinished is not None and unfinished != 0:
+                failures.append(
+                    f"{label}: migration.{field} == {unfinished} "
+                    "(stall-budget migration failed to rescue stranded jobs)"
+                )
+        if mig.get("migrations") == 0:
+            failures.append(
+                f"{label}: migration.migrations == 0 "
+                "(migration machinery never committed a move)"
+            )
     fa = report.get("fleet_async", {})
     dev = fa.get("max_record_rel_dev")
     if dev is not None and dev != 0.0:
@@ -234,6 +267,7 @@ REQUIRED_SECTIONS = (
     "solver",
     "churn",
     "churn_spec",
+    "migration",
     "latency",
     "fleet_async",
 )

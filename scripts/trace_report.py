@@ -11,10 +11,14 @@ the file contents (no flag needed):
     spans per name, prints the top spans by total duration, a percentile
     table for per-job ``job/arrival_to_scheduled`` latencies, the
     barrier-stall attribution (``lane/own_solve`` vs ``lane/barrier_stall``
-    totals), instant-event counts, and per-track wall-clock totals.
+    totals), a migration digest (``migrate/*`` rounds, commit/reject/
+    infeasible splits, moved tasks and transfer-penalty totals), instant-
+    event counts, and per-track wall-clock totals.
   * a **telemetry JSONL** (``FleetTelemetry.to_jsonl``): one ``round`` line
     per dispatch round plus a terminal ``summary`` line. The report prints
-    round-level dispatch/stall totals and, when the summary carries the
+    round-level dispatch/stall totals, the summary's ``migration`` block
+    (commit/reject/infeasible splits and transfer-penalty totals) when a
+    lane ran with a stall budget, and, when the summary carries the
     ``latency`` observability block, the event-latency percentiles, per-lane
     stall table and solver phase split.
 
@@ -76,6 +80,7 @@ def report_chrome(doc: dict, *, top: int) -> int:
     durs: dict[str, list[float]] = {}
     track_busy: dict[int, float] = {}
     instants: dict[str, int] = {}
+    migrate_args: dict[str, list[dict]] = {}
     open_b: dict[tuple[int, str], list[float]] = {}
     unbalanced = 0
     for ev in events:
@@ -98,6 +103,8 @@ def report_chrome(doc: dict, *, top: int) -> int:
             track_busy[tid] = track_busy.get(tid, 0.0) + dur
         elif ph == "i":
             instants[name] = instants.get(name, 0) + 1
+            if name.startswith("migrate/"):
+                migrate_args.setdefault(name, []).append(ev.get("args") or {})
     unbalanced += sum(len(s) for s in open_b.values())
 
     n_spans = sum(len(v) for v in durs.values())
@@ -127,6 +134,30 @@ def report_chrome(doc: dict, *, top: int) -> int:
             f"\nbarrier attribution: own-solve {_fmt_s(own).strip()}, "
             f"stall {_fmt_s(stall).strip()} ({frac:.1%} of lane wall-clock)"
         )
+
+    if migrate_args or durs.get("migrate/round"):
+        commits = migrate_args.get("migrate/commit", [])
+        rejects = migrate_args.get("migrate/reject", [])
+        infeasible = migrate_args.get("migrate/infeasible", [])
+        rounds = durs.get("migrate/round", [])
+        print(
+            f"\nmigration: {len(rounds)} rounds, {len(commits)} commits, "
+            f"{len(rejects)} rejects, {len(infeasible)} infeasible checks"
+        )
+        if commits:
+            moved = sum(int(a.get("moved", 0)) for a in commits)
+            penalty = sum(float(a.get("penalty", 0.0)) for a in commits)
+            print(
+                f"  moved {moved} tasks, transfer penalty "
+                f"{penalty:.3f} simulated s"
+            )
+        if rejects:
+            worst = max(
+                (float(a["migrated_proj"]) for a in rejects if "migrated_proj" in a),
+                default=None,
+            )
+            if worst is not None:
+                print(f"  worst rejected migrated-projection {worst:.3f} simulated s")
 
     if instants:
         print("\ninstant events:")
@@ -160,6 +191,16 @@ def report_jsonl(lines: list[dict], *, top: int) -> int:
         )
 
     for summary in summaries:
+        mig = summary.get("migration")
+        if mig:
+            print(
+                f"\nmigration: {mig.get('migrations', 0)} commits / "
+                f"{mig.get('checks', 0)} checks "
+                f"(rejected {mig.get('rejected', 0)}, "
+                f"infeasible {mig.get('infeasible', 0)}), "
+                f"moved {mig.get('moved_tasks', 0)} tasks, "
+                f"penalty {mig.get('penalty_seconds', 0.0):.3f} simulated s"
+            )
         lat = summary.get("latency")
         if not lat:
             print("  summary carries no latency block (run not observed)")

@@ -47,7 +47,6 @@ import functools
 import itertools
 import os
 import time
-import warnings
 import weakref
 from typing import Sequence
 
@@ -70,7 +69,6 @@ __all__ = [
     "solve_relaxation_sparse",
     "solve_relaxation_sparse_batch",
     "jrba",
-    "jrba_batch",
     "link_load_fits",
     "water_fill",
     "brute_force_span",
@@ -1102,17 +1100,6 @@ class JRBAEngine:
                 self.stats.progs_kept += len(progs)
         self._topo_seen[net] = net.topology_version
 
-    def invalidate_network(self, net: NetworkGraph) -> None:
-        """Deprecated alias for :meth:`invalidate` with ``links=None``."""
-        warnings.warn(
-            "JRBAEngine.invalidate_network(net) is deprecated; use "
-            "JRBAEngine.invalidate(net) (links=None) — or invalidate(net, "
-            "links=mask) for footprint-scoped invalidation",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        self.invalidate(net)
-
     def _check_topology(self, net: NetworkGraph) -> None:
         """Lazy safety net behind :meth:`invalidate`: drop caches whose
         topology epoch is stale (a full drop — the touched-link mask is
@@ -1341,41 +1328,6 @@ class JRBAEngine:
                 )
             self.stats.finalize_seconds += time.perf_counter() - t0
         return results
-
-
-def jrba_batch(
-    net: NetworkGraph,
-    flow_sets: list[list[Flow]],
-    *,
-    k: int = 4,
-    capacities: list[np.ndarray] | None = None,
-    n_iters: int = 400,
-    water_filling: bool = False,
-    refine: bool = True,
-    solver: str = "auto",
-) -> list[JRBAResult | None]:
-    """Deprecated: use :meth:`JRBAEngine.solve_many`.
-
-    This wrapper predates the engine and builds a throwaway
-    :class:`JRBAEngine` per call, so it never reuses the compilation, path,
-    or program-tensor caches — every property the engine exists to provide.
-    It survives one release as an alias; batched callers should hold an
-    engine and call ``engine.solve_many(net, flow_sets, ...)``."""
-    warnings.warn(
-        "jrba_batch is deprecated: construct a JRBAEngine and call "
-        "solve_many (jrba_batch builds a fresh engine per call and skips "
-        "every cache)",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    eng = JRBAEngine(k=k, n_iters=n_iters, solver=solver)
-    return eng.solve_many(
-        net,
-        flow_sets,
-        capacities=capacities,
-        water_filling=water_filling,
-        refine=refine,
-    )
 
 
 # ---------------------------------------------------------------------------

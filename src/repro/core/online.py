@@ -21,14 +21,36 @@ Besides arrivals and completions the event loop understands a third event
 kind, ``"network"``: a churn step (``core.scenarios.ChurnStep``) that drifts
 link capacities and fails/recovers links or nodes mid-simulation. Inputs
 arrive as one :class:`EventTrace` (arrivals + churn merged into a single
-time-ordered stream; the old ``network_events=`` kwarg survives as a
-deprecated shim). The handler invalidates exactly the state a step touched
-— engine caches and speculations are pruned by *footprint* (the touched-link
-mask from ``apply_churn_step`` intersected with each entry's recorded link
-dependencies) rather than dropped wholesale — then re-routes and re-solves
-the running jobs the step affected (OTFS: speculate-then-repair in one
-batched dispatch; OTFA: the usual all-flows refresh; LR/BR/TP: equal-share
-recompute), and runs a scheduling round so recoveries re-admit queued jobs.
+time-ordered stream). The handler invalidates exactly the state a step
+touched — engine caches and speculations are pruned by *footprint* (the
+touched-link mask from ``apply_churn_step`` intersected with each entry's
+recorded link dependencies) rather than dropped wholesale — then re-routes
+and re-solves the running jobs the step affected (OTFS: speculate-then-
+repair in one batched dispatch; OTFA: the usual all-flows refresh; LR/BR/TP:
+equal-share recompute), and runs a scheduling round so recoveries re-admit
+queued jobs.
+
+With a ``stall_budget`` (OTFS only) the simulator additionally runs the
+**migration subsystem**: a running job that a churn step leaves stalled
+(zero bandwidth, infinite span) is proactively *migrated* instead of waiting
+indefinitely for a recovery that — under permanent failures — never comes.
+A node failure under a job's placement triggers the first migration check
+immediately; any other stall is checked once it has lasted ``stall_budget``
+simulated seconds (a fourth event kind, ``"migrate"``). Each check re-runs
+Algorithm 1 for the job over the *surviving* nodes (dead — fully isolated —
+nodes are banned from placement), solves JRBA on the live residual, and
+charges a data-transfer penalty: bytes already materialized on the dead or
+degraded placement must move to the new one at current avg-bandwidth,
+extending the remaining span. The migration commits only when the migrated
+completion (penalty + remaining x new span) beats the projected
+wait-for-recovery completion (the current check's backoff window + remaining
+x pre-stall span); otherwise the job keeps its stall-and-wait behaviour and
+the next check backs off exponentially — so a permanently dead placement
+eventually loses to any feasible migration (the liveness property the
+hypothesis suite asserts), while a transient dip keeps waiting. Migration
+re-solves ride the same speculate-then-repair batched dispatch path as churn
+re-solves: one ``solve_many`` per blast, records bit-identical to the
+sequential reference.
 """
 from __future__ import annotations
 
@@ -36,7 +58,6 @@ import dataclasses
 import heapq
 import math
 import time
-import warnings
 from typing import Generator, Sequence
 
 import numpy as np
@@ -51,7 +72,7 @@ from .allocation import (
 )
 from .graph import Flow, JobGraph, NetworkGraph
 from .jrba import JRBAEngine, JRBAResult, link_load_fits
-from .paths import path_links
+from .paths import avg_path_bandwidth, path_links
 from .scenarios import ChurnStep, apply_churn_step
 from ..obs.metrics import NULL_METRICS
 from ..obs.trace import NULL_TRACER
@@ -76,36 +97,20 @@ class EventTrace:
     """The full input timeline of one simulation: job arrivals plus the
     optional churn trace, merged by :meth:`OnlineScheduler.step` into one
     time-ordered event stream. A plain arrival list is still accepted
-    everywhere an ``EventTrace`` is (it coerces to a churn-free trace);
-    the legacy ``network_events=`` kwarg is a deprecated shim for
-    ``EventTrace(arrivals, churn=...)``. Future event kinds (e.g. job
-    migrations) extend this container rather than adding more parallel
-    kwargs."""
+    everywhere an ``EventTrace`` is (it coerces to a churn-free trace).
+    Future externally-driven event kinds extend this container rather than
+    adding parallel kwargs (internally-generated events — completions,
+    migration checks — never appear here)."""
 
     arrivals: list[Arrival]
     churn: Sequence[ChurnStep] | None = None
 
 
-def _coerce_events(
-    events: EventTrace | list[Arrival],
-    network_events: Sequence[ChurnStep] | None,
-    *,
-    stacklevel: int = 3,
-) -> EventTrace:
+def _coerce_events(events: EventTrace | list[Arrival]) -> EventTrace:
     """Normalize ``run``/``step`` input to an :class:`EventTrace`."""
     if isinstance(events, EventTrace):
-        if network_events is not None:
-            raise TypeError(
-                "pass churn via EventTrace.churn, not the network_events= kwarg"
-            )
         return events
-    if network_events is not None:
-        warnings.warn(
-            "network_events= is deprecated; pass EventTrace(arrivals, churn=...)",
-            DeprecationWarning,
-            stacklevel=stacklevel,
-        )
-    return EventTrace(list(events), churn=network_events)
+    return EventTrace(list(events))
 
 
 @dataclasses.dataclass
@@ -125,6 +130,18 @@ class JobRecord:
     last_update: float = 0.0
     initial_span: float = float("inf")
     done: bool = False
+    # migration bookkeeping (OTFS with a stall_budget): when the current
+    # stall began, the healthy span it interrupted (the wait-for-recovery
+    # projection resumes at this rate), the time of the next scheduled
+    # migration check (-1 = none pending; a "migrate" event is stale unless
+    # it matches, exactly like finish_time for finish events), how many
+    # checks this stall has burned (drives the exponential backoff), and how
+    # many times the job actually moved
+    stall_since: float = -1.0
+    prestall_span: float = float("inf")
+    migrate_time: float = -1.0
+    migrate_checks: int = 0
+    migrations: int = 0
 
     @property
     def scheduled(self) -> bool:
@@ -180,6 +197,26 @@ class SimResult:
     # len(affected) per step.
     churn_wide_jobs: int = 0
     churn_wide_dispatches: int = 0
+    # migration traffic (zero unless the scheduler was built with a
+    # stall_budget): candidate evaluations, commits, decision rejections
+    # (waiting projected cheaper), infeasible attempts (no surviving
+    # placement or unroutable flows), non-pinned tasks actually relocated,
+    # total data-transfer penalty charged (simulated seconds), and the
+    # speculate-then-repair outcome of batched migration re-solves
+    migration_checks: int = 0
+    migrations: int = 0
+    migration_rejected: int = 0
+    migration_infeasible: int = 0
+    migration_moved_tasks: int = 0
+    migration_penalty_seconds: float = 0.0
+    migration_spec_accepted: int = 0
+    migration_spec_repaired: int = 0
+
+    @property
+    def migration_commit_rate(self) -> float:
+        """Committed moves per migration check (0.0 when migration never
+        ran)."""
+        return self.migrations / self.migration_checks if self.migration_checks else 0.0
 
     @property
     def spec_accept_rate(self) -> float:
@@ -331,6 +368,7 @@ class OnlineScheduler:
         k_paths: int = 4,
         jrba_iters: int = 300,
         max_acceptable_span: float = 1e4,
+        stall_budget: float | None = None,
         engine: JRBAEngine | None = None,
         speculate: bool = True,
         scoped_churn: bool = True,
@@ -345,6 +383,23 @@ class OnlineScheduler:
         self.base = policy.split("+")[0]
         self.max_acceptable_span = max_acceptable_span
         self.water_fill = policy.endswith("+WF")
+        # migration SLO (OTFS only): a running job stalled by churn is
+        # considered for proactive migration — a node failure under its
+        # placement triggers the first check immediately, any other stall is
+        # checked after stall_budget simulated seconds, and rejected checks
+        # back off exponentially (each expired window doubles the projected
+        # further wait for recovery, so a permanently dead placement
+        # eventually loses to any feasible migration). None disables
+        # migration entirely — stall-and-wait, bit-identical to before.
+        if stall_budget is not None:
+            if not (np.isfinite(stall_budget) and stall_budget > 0):
+                raise ValueError("stall_budget must be a positive finite duration")
+            if self.base != "OTFS":
+                raise ValueError(
+                    "migration (stall_budget=) requires an OTFS policy; "
+                    f"got {policy!r}"
+                )
+        self.stall_budget = stall_budget
         # OTFS only: solve all waiting jobs of a round in one batched call
         # against the round-start residual, then repair conflicts per job.
         # Admission outcomes are exactly the sequential ones (see
@@ -381,7 +436,25 @@ class OnlineScheduler:
             return allocate_whole_job_lr(self.net, job, job_id=job_id)
         if self.base == "BR":
             return allocate_whole_job_br(self.net, job, job_id=job_id)
-        return allocate_greedy(self.net, job, job_id=job_id)  # TP / OTFS / OTFA
+        if self.stall_budget is None:
+            return allocate_greedy(self.net, job, job_id=job_id)  # TP / OTFS / OTFA
+        # migration enabled: never place work on a dead (fully isolated)
+        # node. Algorithm 1's bandwidth terms already steer comm-connected
+        # tasks away from dead hardware (avg bandwidth 0 -> t_comm inf), but
+        # a task with no placed predecessor sees t_comm 0 everywhere and
+        # could seed a placement on a dead node; banning through the memory
+        # check closes that hole without touching the allocator. Dead nodes
+        # are never debited, so restoring their entries afterwards is exact.
+        net = self.net
+        dead = [n for n in range(net.n_nodes) if not net.neighbors(n)]
+        if not dead:
+            return allocate_greedy(net, job, job_id=job_id)
+        saved = net.mem_avail[dead].copy()
+        net.mem_avail[dead] = -np.inf
+        try:
+            return allocate_greedy(net, job, job_id=job_id)
+        finally:
+            net.mem_avail[dead] = saved
 
     def _allocate_traced(
         self, job: JobGraph, job_id: int
@@ -405,7 +478,6 @@ class OnlineScheduler:
         events: EventTrace | list[Arrival],
         *,
         max_time: float = 1e6,
-        network_events: Sequence[ChurnStep] | None = None,
     ) -> SimResult:
         """Drive :meth:`step` to completion, answering every
         :class:`RoundRequest` inline through the scheduler's own engine.
@@ -414,9 +486,8 @@ class OnlineScheduler:
         through one ``solve_many`` dispatch (the intra-round batching win).
 
         ``events`` is an :class:`EventTrace` (or a bare arrival list, which
-        coerces to a churn-free trace); ``network_events=`` is a deprecated
-        shim for ``EventTrace(arrivals, churn=...)``."""
-        stepper = self.step(_coerce_events(events, network_events), max_time=max_time)
+        coerces to a churn-free trace)."""
+        stepper = self.step(_coerce_events(events), max_time=max_time)
         try:
             req = next(stepper)
             while True:
@@ -447,7 +518,6 @@ class OnlineScheduler:
         events: EventTrace | list[Arrival],
         *,
         max_time: float = 1e6,
-        network_events: Sequence[ChurnStep] | None = None,
     ) -> Generator[RoundRequest, RoundReply, SimResult]:
         """Resumable event loop: a generator that yields a
         :class:`RoundRequest` at every point the simulation needs JRBA
@@ -466,9 +536,12 @@ class OnlineScheduler:
         round (recoveries re-admit jobs the degraded network rejected). The
         topology is restored to its construction state first, so re-running
         the same (net, trace) pair is reproducible. A bare arrival list
-        coerces to a churn-free trace; ``network_events=`` is a deprecated
-        shim for ``EventTrace(arrivals, churn=...)``."""
-        trace = _coerce_events(events, network_events)
+        coerces to a churn-free trace.
+
+        With a ``stall_budget``, stalled jobs additionally generate
+        ``"migrate"`` events — the proactive-migration checks described in
+        the module docstring."""
+        trace = _coerce_events(events)
         arrivals = trace.arrivals
         net = self.net
         churn_steps = list(trace.churn or [])
@@ -503,6 +576,12 @@ class OnlineScheduler:
         churn_spec_survived = churn_spec_dropped = 0
         churn_spec_accepted = churn_spec_repaired = 0
         churn_wide_jobs = churn_wide_dispatches = 0
+        migration_checks = migrations = 0
+        migration_rejected = migration_infeasible = 0
+        migration_moved_tasks = 0
+        migration_penalty_seconds = 0.0
+        migration_spec_accepted = migration_spec_repaired = 0
+        migrate_on = self.stall_budget is not None  # __init__ pinned base=OTFS
 
         def solve_round(reqs: list[SolveRequest]):
             """Sub-generator wrapping every driver suspension: yields one
@@ -559,19 +638,37 @@ class OnlineScheduler:
                     for l in path_links(net, route):
                         net.residual[l] = max(net.residual[l] - b, 0.0)
 
+        def schedule_migrate(r: JobRecord, now: float) -> None:
+            """Queue this job's next migration check. Check k fires
+            ``stall_budget * 2**k`` after the previous one — the exponential
+            backoff that both bounds the event count for an unmigratable job
+            (log, not linear, in the horizon) and makes the wait-for-recovery
+            projection grow until any feasible migration wins."""
+            nonlocal seq
+            r.migrate_time = now + self.stall_budget * (2.0**r.migrate_checks)
+            heapq.heappush(events, (r.migrate_time, seq, "migrate", r.job_id))
+            seq += 1
+
         def commit_reroute(r: JobRecord, res: JRBAResult, now: float) -> None:
             """Commit one churn re-solve: accept the new routes/bandwidths if
             the span clears the admission bar, else stall the job (zero
             bandwidth, infinite span, memory held) until a later recovery or
-            finish event re-solves it."""
+            finish event re-solves it — or, with a stall_budget, until a
+            migration check moves it off the dead placement."""
             nonlocal churn_reroutes, churn_stalls
             old_routes = r.routes
+            old_span = r.span
             span = job_span(net, r.alloc, r.flows, res.bandwidth)
             if np.isfinite(span) and span <= self.max_acceptable_span:
                 r.bandwidths, r.routes, r.span = res.bandwidth, res.routes, span
                 if r.routes != old_routes:
                     churn_reroutes += 1
                 net.residual = np.maximum(net.residual - res.link_load, 0.0)
+                # recovered on its own placement: the SLO clock stops and any
+                # pending migration check goes stale (migrate_time mismatch)
+                r.stall_since = -1.0
+                r.migrate_time = -1.0
+                r.migrate_checks = 0
                 set_finish_event(r, now)
             else:
                 # same acceptability bar as admission: committing a
@@ -581,6 +678,16 @@ class OnlineScheduler:
                 r.bandwidths = np.zeros(len(r.flows))
                 r.routes = res.routes
                 r.span = float("inf")
+                if np.isfinite(old_span):
+                    # fresh stall: remember the healthy span (wait-for-
+                    # recovery projects resuming at this rate) and start the
+                    # SLO clock. A re-stall of an already-stalled job keeps
+                    # the original clock and its pending check.
+                    r.prestall_span = old_span
+                    r.stall_since = now
+                    r.migrate_checks = 0
+                    if migrate_on:
+                        schedule_migrate(r, now)
                 set_finish_event(r, now)  # invalidates any queued event
 
         def churn_reroute(affected: list[JobRecord], now: float):
@@ -686,6 +793,268 @@ class OnlineScheduler:
             if wide:
                 churn_wide_jobs += len(order)
                 churn_wide_dispatches += n_dispatches - dispatches0
+
+        def trial_alloc(r: JobRecord):
+            """Re-run Algorithm 1 for a stalled job as if its current
+            placement were released: credit the old allocation's memory back
+            (pinned tasks skipped, symmetric with admission/finish), allocate
+            over the survivors (``_allocate`` bans dead nodes when migration
+            is on), and return ``(alloc, flows, mem_after)`` where
+            ``mem_after`` is the memory state a commit would install.
+            ``net.mem_avail`` is restored before returning — the trial has no
+            side effect until :func:`commit_migration` replays it."""
+            mem_entry = net.mem_avail.copy()
+            for i, task in enumerate(r.job.tasks):
+                if task.pinned_node is None:
+                    net.mem_avail[int(r.alloc.assignment[i])] += task.mem
+            alloc, flows, _footprint = self._allocate_traced(r.job, r.job_id)
+            mem_after = net.mem_avail.copy() if alloc.feasible else None
+            net.mem_avail = mem_entry
+            return alloc, flows, mem_after
+
+        def transfer_penalty(r: JobRecord, new_assignment: np.ndarray) -> float:
+            """Seconds to move the bytes already materialized on the old
+            placement to the new one at current avg-bandwidth. For each job
+            edge (u, v, vol) whose consumer task v relocates, the stream
+            state absorbed so far is ``done_units * vol``; it moves from v's
+            old node — or, when that node can't reach the destination (dead,
+            or trapped in a partitioned island), is re-streamed by producer u
+            from its new home, the surviving upstream copy — over the current
+            topology's average-bandwidth path. The upstream chain bottoms out
+            at the pinned source, which a feasible new placement can always
+            reach (Algorithm 1 just routed from it), so a partition strands
+            data, never the job. Transfers run concurrently, so the penalty
+            is the slowest single transfer; a destination unreachable even
+            from the upstream copy makes the migration infeasible (``inf``)."""
+            done = max(r.total_units - max(r.remaining_units, 0.0), 0.0)
+            if done <= 0.0:
+                return 0.0
+            old = r.alloc.assignment
+            worst = 0.0
+            for u, v, vol in r.job.edges:
+                src, dst = int(old[v]), int(new_assignment[v])
+                if src == dst or vol <= 0.0:
+                    continue
+                bw = avg_path_bandwidth(net, src, dst) if net.neighbors(src) else 0.0
+                if bw <= 0.0:  # unreachable old copy: upstream re-streams
+                    src = int(new_assignment[u])
+                    if src == dst:
+                        continue  # colocated with the surviving copy — free
+                    bw = avg_path_bandwidth(net, src, dst)
+                    if bw <= 0.0:
+                        return float("inf")
+                if np.isfinite(bw):
+                    worst = max(worst, done * vol / bw)
+            return worst
+
+        def mark_unmigratable(r: JobRecord, now: float) -> None:
+            """No surviving placement (or unroutable/unreachable): the job
+            keeps stalling; back off and re-check — capacity freed by later
+            finishes or churn can make a future check feasible."""
+            nonlocal migration_infeasible
+            migration_infeasible += 1
+            r.migrate_checks += 1
+            schedule_migrate(r, now)
+            tracer.instant("migrate/infeasible", track=track, cat="migrate", job=r.job_id)
+
+        def commit_migration(r, alloc, flows, mem_after, res, now: float) -> bool:
+            """The migrate-or-wait decision, then the commit. Migrating
+            projects ``penalty + remaining * new_span`` seconds to
+            completion; waiting projects riding out the current backoff
+            window and then resuming at the pre-stall span. Commit iff
+            migrating wins; otherwise keep stall-and-wait and let the next
+            (doubled) window re-ask. Returns True iff the job moved."""
+            nonlocal migrations, migration_rejected
+            nonlocal migration_moved_tasks, migration_penalty_seconds
+            bandwidths = np.zeros(0) if res is None else res.bandwidth
+            span = job_span(net, alloc, flows, bandwidths)
+            penalty = transfer_penalty(r, alloc.assignment)
+            if (
+                not np.isfinite(span)
+                or span > self.max_acceptable_span
+                or not np.isfinite(penalty)
+            ):
+                mark_unmigratable(r, now)
+                return False
+            rem = max(r.remaining_units, 0.0)
+            window = self.stall_budget * (2.0**r.migrate_checks)
+            migrated_proj = penalty + rem * span
+            wait_proj = window + (rem * r.prestall_span if rem > 0.0 else 0.0)
+            if migrated_proj > wait_proj:
+                migration_rejected += 1
+                r.migrate_checks += 1
+                schedule_migrate(r, now)
+                tracer.instant(
+                    "migrate/reject",
+                    track=track,
+                    cat="migrate",
+                    job=r.job_id,
+                    migrated_proj=migrated_proj,
+                    wait_proj=wait_proj,
+                )
+                return False
+            moved = sum(
+                1
+                for i, task in enumerate(r.job.tasks)
+                if task.pinned_node is None
+                and int(alloc.assignment[i]) != int(r.alloc.assignment[i])
+            )
+            net.mem_avail = mem_after.copy()
+            r.alloc, r.flows = alloc, flows
+            r.routes = [] if res is None else res.routes
+            r.bandwidths = bandwidths
+            r.span = span
+            if res is not None:
+                net.residual = np.maximum(net.residual - res.link_load, 0.0)
+            if penalty > 0.0 and span > 0.0:
+                # the transfer extends the remaining span: express it as
+                # extra stream units at the new rate so advance_running and
+                # the finish event stay consistent
+                # (finish = now + penalty + remaining * span)
+                r.remaining_units += penalty / span
+            r.stall_since = -1.0
+            r.migrate_time = -1.0
+            r.migrate_checks = 0
+            r.migrations += 1
+            migrations += 1
+            migration_moved_tasks += moved
+            migration_penalty_seconds += penalty
+            tracer.instant(
+                "migrate/commit",
+                track=track,
+                cat="migrate",
+                job=r.job_id,
+                moved=moved,
+                penalty=penalty,
+            )
+            set_finish_event(r, now)
+            return True
+
+        def migration_round(cands: list[JobRecord], now: float):
+            """Evaluate migration for stalled candidates in admission order,
+            riding the same speculate-then-repair batched dispatch shape as
+            :func:`churn_reroute`: every candidate's Algorithm-1 re-run is
+            trialled against the round-start memory and its JRBA program
+            solved against the round-start residual in ONE batched dispatch;
+            commits then proceed in admission order, keeping a speculative
+            entry verbatim iff the live memory still equals its snapshot
+            (the Algorithm-1 replay is deterministic in it) and the live
+            residual clamp-equals the snapshot on the solution's candidate
+            links. A conflicted candidate re-trials on the live state,
+            riding one dispatch with a re-speculation of every remaining
+            stale candidate. ``speculate=False`` forces the sequential
+            reference path — one trial + one dispatch per candidate — whose
+            records the batched path provably reproduces."""
+            nonlocal migration_checks, migration_spec_accepted, migration_spec_repaired
+            order = sorted(cands, key=lambda j: (j.schedule_time, j.job_id))
+            if not order:
+                return
+            migration_checks += len(order)
+            # stalled jobs hold no links, but make the residual authoritative
+            # before pricing the survivors' spare capacity
+            rebuild_residual_from_running()
+            if not (self.speculate and len(order) > 1):
+                for r in order:
+                    alloc, flows, mem_after = trial_alloc(r)
+                    if not alloc.feasible:
+                        mark_unmigratable(r, now)
+                        continue
+                    res = None
+                    if flows:
+                        (res,) = yield from solve_round(
+                            [SolveRequest(net, flows, net.residual.copy(), self.water_fill)]
+                        )
+                    commit_migration(r, alloc, flows, mem_after, res, now)
+                return
+            mem0 = net.mem_avail.copy()
+            cap0 = net.residual.copy()
+            # per-candidate speculative entry:
+            # [alloc, flows, mem_after, result, capacity0, mem_before]
+            spec: dict[int, list] = {}
+            for r in order:
+                net.mem_avail = mem0.copy()
+                alloc, flows, mem_after = trial_alloc(r)
+                spec[r.job_id] = [alloc, flows, mem_after, None, cap0, mem0]
+            net.mem_avail = mem0
+            live = [r for r in order if spec[r.job_id][0].feasible and spec[r.job_id][1]]
+            if live:
+                results = yield from solve_round(
+                    [
+                        SolveRequest(net, spec[r.job_id][1], cap0, self.water_fill)
+                        for r in live
+                    ]
+                )
+                for r, res in zip(live, results):
+                    spec[r.job_id][3] = res
+
+            def entry_exact(e: list) -> bool:
+                # same two-part exactness check the admission repair pass
+                # uses, with the memory half made explicit: the trial ran
+                # against e[5], so an untouched mem_avail replays Algorithm 1
+                # bit-identically, and a residual that clamp-equals the
+                # snapshot on the solution's candidate links replays the
+                # solve bit-identically (build_program clamps at 1e-9)
+                if not np.array_equal(net.mem_avail, e[5]):
+                    return False
+                if e[3] is None:
+                    return e[0].feasible is False or not e[1]
+                mask = e[3].candidate_links
+                return bool(
+                    np.array_equal(
+                        np.maximum(net.residual[mask], 1e-9),
+                        np.maximum(e[4][mask], 1e-9),
+                    )
+                )
+
+            for i, r in enumerate(order):
+                e = spec[r.job_id]
+                if entry_exact(e):
+                    migration_spec_accepted += 1
+                    tracer.instant(
+                        "migrate/spec_accept", track=track, cat="migrate", job=r.job_id
+                    )
+                else:
+                    # conflict: an earlier commit moved the memory state or
+                    # the residual under this candidate. Re-trial on the live
+                    # state, and re-speculate every remaining stale candidate
+                    # in the same dispatch so one conflict doesn't degrade
+                    # the round to sequential.
+                    migration_spec_repaired += 1
+                    tracer.instant(
+                        "migrate/spec_repair", track=track, cat="migrate", job=r.job_id
+                    )
+                    memR = net.mem_avail.copy()
+                    capR = net.residual.copy()
+                    stale = [r] + [
+                        rr for rr in order[i + 1 :] if not entry_exact(spec[rr.job_id])
+                    ]
+                    for rr in stale:
+                        net.mem_avail = memR.copy()
+                        alloc, flows, mem_after = trial_alloc(rr)
+                        spec[rr.job_id][:] = [alloc, flows, mem_after, None, capR, memR]
+                    net.mem_avail = memR
+                    batch = [
+                        rr
+                        for rr in stale
+                        if spec[rr.job_id][0].feasible and spec[rr.job_id][1]
+                    ]
+                    if batch:
+                        results = yield from solve_round(
+                            [
+                                SolveRequest(
+                                    net, spec[rr.job_id][1], capR, self.water_fill
+                                )
+                                for rr in batch
+                            ]
+                        )
+                        for rr, rres in zip(batch, results):
+                            spec[rr.job_id][3] = rres
+                    e = spec[r.job_id]
+                alloc, flows, mem_after, res = e[0], e[1], e[2], e[3]
+                if not alloc.feasible:
+                    mark_unmigratable(r, now)
+                    continue
+                commit_migration(r, alloc, flows, mem_after, res, now)
 
         def refresh_equal_share(now: float) -> None:
             """LR/BR/TP: global equal-share refresh of all active flows."""
@@ -1041,6 +1410,30 @@ class OnlineScheduler:
                         "churn/reroute", track=track, cat="churn", n_affected=len(affected), t=now
                     ):
                         yield from churn_reroute(affected, now)
+                    if migrate_on and effect.failed_nodes:
+                        # node failure under a running job's placement: the
+                        # first migration check fires immediately (the
+                        # re-solve above just stalled these jobs — their
+                        # placement sits on dead hardware and a recovery may
+                        # never come); capacity-collapse stalls instead wait
+                        # out the stall budget
+                        blast = set(effect.failed_nodes)
+                        cands = [
+                            r
+                            for r in q_run
+                            if r.flows
+                            and not np.isfinite(r.span)
+                            and any(int(a) in blast for a in r.alloc.assignment)
+                        ]
+                        if cands:
+                            with tracer.span(
+                                "migrate/round",
+                                track=track,
+                                cat="migrate",
+                                n_candidates=len(cands),
+                                t=now,
+                            ):
+                                yield from migration_round(cands, now)
                 elif self.base == "OTFA":
                     if q_run:
                         yield from refresh_otfa(now)
@@ -1051,6 +1444,40 @@ class OnlineScheduler:
                 tracer.end("event/" + kind, track=track)
                 continue
             r = by_id[jid]
+            if kind == "migrate":
+                # a stall-budget check coming due. Stale unless the job is
+                # still running, still stalled, and this is its CURRENT
+                # scheduled check (commit/un-stall/backoff all re-stamp
+                # migrate_time, exactly like finish_time for finish events).
+                if (
+                    r not in q_run
+                    or np.isfinite(r.span)
+                    or not math.isclose(r.migrate_time, now, rel_tol=1e-9, abs_tol=1e-9)
+                ):
+                    tracer.end("event/" + kind, track=track)
+                    continue
+                advance_running(now)
+                # batch every candidate whose check falls due at this instant
+                # — jobs stalled by one blast share a deadline, and one
+                # migration_round turns them into one solve_many dispatch
+                due = [
+                    j
+                    for j in q_run
+                    if j.flows
+                    and not np.isfinite(j.span)
+                    and j.migrate_time >= 0.0
+                    and math.isclose(j.migrate_time, now, rel_tol=1e-9, abs_tol=1e-9)
+                ]
+                with tracer.span(
+                    "migrate/round", track=track, cat="migrate", n_candidates=len(due), t=now
+                ):
+                    yield from migration_round(due, now)
+                # a commit released the old placement's memory — queued jobs
+                # may fit now
+                with tracer.span("sched/round", track=track, cat="round", t=now):
+                    yield from schedule_round(now)
+                tracer.end("event/" + kind, track=track)
+                continue
             if kind == "finish":
                 # relative tolerance: event times are O(now), so an absolute
                 # epsilon would misclassify fp-noise-level differences once
@@ -1121,4 +1548,12 @@ class OnlineScheduler:
             churn_spec_repaired=churn_spec_repaired,
             churn_wide_jobs=churn_wide_jobs,
             churn_wide_dispatches=churn_wide_dispatches,
+            migration_checks=migration_checks,
+            migrations=migrations,
+            migration_rejected=migration_rejected,
+            migration_infeasible=migration_infeasible,
+            migration_moved_tasks=migration_moved_tasks,
+            migration_penalty_seconds=migration_penalty_seconds,
+            migration_spec_accepted=migration_spec_accepted,
+            migration_spec_repaired=migration_spec_repaired,
         )

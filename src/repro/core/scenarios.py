@@ -20,10 +20,13 @@ Poisson or Markov-modulated bursts) so benchmarks and tests can iterate
 
 The module also generates **churn traces** — timestamped network mutations
 (per-link capacity drift as a bounded random walk, link/node failure +
-recovery cycles, MMPP-correlated bandwidth dips) consumed by the online
-simulator's ``"network"`` event kind. Every failure op has its matching
-recovery op emitted (even past ``t_end``), so a trace always returns the
-network to a fully-connected state and stalled jobs can finish.
+recovery cycles, MMPP-correlated bandwidth dips, correlated blast-radius
+group outages) consumed by the online simulator's ``"network"`` event kind.
+By default every failure op has its matching recovery op emitted (even past
+``t_end``), so a trace returns the network to a fully-connected state and
+stalled jobs can finish; ``permanent=True`` deliberately suppresses the
+recovery ops, producing traces that never heal — the chaos input the
+migration subsystem (``OnlineScheduler(stall_budget=...)``) exists for.
 """
 from __future__ import annotations
 
@@ -45,6 +48,7 @@ __all__ = [
     "capacity_drift_trace",
     "churn_trace",
     "compute_nodes",
+    "correlated_failure_trace",
     "fat_tree",
     "get_scenario",
     "heterogeneous_mesh",
@@ -91,11 +95,19 @@ class ChurnEffect(NamedTuple):
     (and with it candidate-path enumerations crossing the touched links)
     changed; ``links_added`` says the adjacency *gained* links (a recovery),
     which is the one case scoped invalidation cannot bound — a new link can
-    create a shorter path between any pair, so caches must drop wholesale."""
+    create a shorter path between any pair, so caches must drop wholesale.
+
+    ``failed_nodes`` / ``recovered_nodes`` surface the node ids of effective
+    node-level ops (``fail_node``/``recover_node`` that actually changed at
+    least one link), so consumers can scope node-level reactions — e.g. the
+    migration subsystem's "a node under a running job just died" trigger —
+    without re-diffing the graph against the touched-link mask."""
 
     touched: np.ndarray
     topo_changed: bool
     links_added: bool
+    failed_nodes: tuple[int, ...] = ()
+    recovered_nodes: tuple[int, ...] = ()
 
 
 def apply_churn_step(net: NetworkGraph, step: ChurnStep) -> ChurnEffect:
@@ -105,6 +117,8 @@ def apply_churn_step(net: NetworkGraph, step: ChurnStep) -> ChurnEffect:
     touched = np.zeros(len(net.links), dtype=bool)
     topo_changed = False
     links_added = False
+    failed_nodes: list[int] = []
+    recovered_nodes: list[int] = []
     for op in step.ops:
         if op.kind == "capacity":
             u, v = op.link
@@ -128,14 +142,20 @@ def apply_churn_step(net: NetworkGraph, step: ChurnStep) -> ChurnEffect:
             ids = net.fail_node(op.node)
             touched[ids] = True
             topo_changed = topo_changed or bool(ids)
+            if ids:
+                failed_nodes.append(op.node)
         elif op.kind == "recover_node":
             ids = net.recover_node(op.node)
             touched[ids] = True
             topo_changed = topo_changed or bool(ids)
             links_added = links_added or bool(ids)
+            if ids:
+                recovered_nodes.append(op.node)
         else:
             raise ValueError(f"unknown churn op kind {op.kind!r}")
-    return ChurnEffect(touched, topo_changed, links_added)
+    return ChurnEffect(
+        touched, topo_changed, links_added, tuple(failed_nodes), tuple(recovered_nodes)
+    )
 
 
 def capacity_drift_trace(
@@ -184,12 +204,16 @@ def link_failure_trace(
     n_links: int = 3,
     mtbf: float = 25.0,
     mttr: float = 5.0,
+    permanent: bool = False,
 ) -> list[ChurnStep]:
     """Exponential fail/recover cycles on ``n_links`` randomly sampled links.
 
     Each sampled link alternates up (mean ``mtbf``) and down (mean ``mttr``)
     phases; a failure whose up-phase starts before ``t_end`` always emits its
-    recovery too, so the trace never leaves the network degraded forever."""
+    recovery too, so the trace never leaves the network degraded forever —
+    unless ``permanent=True``, which suppresses the guaranteed-heal recovery
+    op: each sampled link fails once at its first failure time and stays dead
+    (hardware loss, not a reboot)."""
     chosen = rng.choice(len(net.links), size=min(n_links, len(net.links)), replace=False)
     steps: list[ChurnStep] = []
     for l in sorted(int(c) for c in chosen):
@@ -198,6 +222,8 @@ def link_failure_trace(
         while t < t_end:
             down = rng.exponential(mttr)
             steps.append(ChurnStep(t, (ChurnOp("fail", link=link),)))
+            if permanent:
+                break
             steps.append(ChurnStep(t + down, (ChurnOp("recover", link=link),)))
             t += down + rng.exponential(mtbf)
     return steps
@@ -211,19 +237,78 @@ def node_failure_trace(
     n_nodes: int = 1,
     mtbf: float = 40.0,
     mttr: float = 6.0,
+    permanent: bool = False,
+    nodes: list[int] | None = None,
 ) -> list[ChurnStep]:
     """Whole-node outages (every incident link fails) with guaranteed
-    recovery, on ``n_nodes`` randomly sampled nodes."""
-    chosen = rng.choice(net.n_nodes, size=min(n_nodes, net.n_nodes), replace=False)
+    recovery, on ``n_nodes`` randomly sampled nodes (restricted to ``nodes``
+    when given, so e.g. pinned-source tiers can be kept out of the blast).
+    ``permanent=True`` suppresses the recovery op: each sampled node dies
+    once and never comes back — the trace shape that strands stall-and-wait
+    jobs and makes migration load-bearing."""
+    pool = list(range(net.n_nodes)) if nodes is None else sorted(nodes)
+    chosen = rng.choice(len(pool), size=min(n_nodes, len(pool)), replace=False)
     steps: list[ChurnStep] = []
-    for node in sorted(int(c) for c in chosen):
+    for node in sorted(pool[int(c)] for c in chosen):
         t = rng.exponential(mtbf)
         while t < t_end:
             down = rng.exponential(mttr)
             steps.append(ChurnStep(t, (ChurnOp("fail_node", node=node),)))
+            if permanent:
+                break
             steps.append(ChurnStep(t + down, (ChurnOp("recover_node", node=node),)))
             t += down + rng.exponential(mtbf)
     return steps
+
+
+def correlated_failure_trace(
+    net: NetworkGraph,
+    rng: np.random.RandomState,
+    *,
+    t_end: float,
+    n_groups: int = 2,
+    group_size: int = 3,
+    mtbf: float = 30.0,
+    mttr: float = 8.0,
+    permanent: bool = False,
+    nodes: list[int] | None = None,
+) -> list[ChurnStep]:
+    """Blast-radius failures: disjoint node groups (a rack, a zone, a site
+    behind one uplink) die *together* in a single :class:`ChurnStep` — one
+    atomic churn event the scheduler reacts to once — and recover together,
+    unless ``permanent=True`` (the whole rack is gone for good).
+
+    Groups are sampled without replacement from ``nodes`` (default: all
+    nodes), so passing the non-source tier keeps pinned video sources out of
+    the blast radius. Independent per-node failure traces never produce this
+    correlated pattern, and it is exactly what stresses migration: a single
+    step can knock out every replicaful placement choice a job had."""
+    pool = list(range(net.n_nodes)) if nodes is None else sorted(nodes)
+    n_pick = min(n_groups * group_size, len(pool))
+    chosen = [pool[int(c)] for c in rng.choice(len(pool), size=n_pick, replace=False)]
+    groups = [
+        sorted(chosen[g * group_size : (g + 1) * group_size])
+        for g in range(len(chosen) // max(group_size, 1))
+    ]
+    steps: list[ChurnStep] = []
+    for group in groups:
+        if not group:
+            continue
+        t = rng.exponential(mtbf)
+        while t < t_end:
+            down = rng.exponential(mttr)
+            steps.append(
+                ChurnStep(t, tuple(ChurnOp("fail_node", node=n) for n in group))
+            )
+            if permanent:
+                break
+            steps.append(
+                ChurnStep(
+                    t + down, tuple(ChurnOp("recover_node", node=n) for n in group)
+                )
+            )
+            t += down + rng.exponential(mtbf)
+    return sorted(steps, key=lambda s: s.time)
 
 
 def mmpp_dip_trace(
@@ -502,6 +587,41 @@ def _bursty(lam_burst: float = 3.0, total_units: float = 12.0):
     return make
 
 
+def _chaos_source_tier(net: NetworkGraph) -> list[int]:
+    """The protected sensor tier of the node-chaos scenario: the first
+    quarter of the compute nodes. Cameras (pinned sources) live here and the
+    blast-radius trace never touches it — a job whose *source* hardware dies
+    is unmigratable by construction (the data feed itself is gone), which is
+    a different failure mode than the one this scenario isolates."""
+    nodes = compute_nodes(net)
+    return nodes[: max(2, len(nodes) // 4)]
+
+
+def _chaos_arrivals(net: NetworkGraph, rng: np.random.RandomState, n_jobs: int) -> Arrivals:
+    return poisson_arrivals(
+        n_jobs,
+        net.n_nodes,
+        rng,
+        lam=1.0,
+        total_units=40.0,
+        source_nodes=_chaos_source_tier(net),
+    )
+
+
+def _chaos_churn(net: NetworkGraph, rng: np.random.RandomState, t_end: float) -> list[ChurnStep]:
+    protected = set(_chaos_source_tier(net))
+    return correlated_failure_trace(
+        net,
+        rng,
+        t_end=t_end,
+        n_groups=2,
+        group_size=3,
+        mtbf=2.5,
+        permanent=True,
+        nodes=[n for n in range(net.n_nodes) if n not in protected],
+    )
+
+
 SCENARIOS: dict[str, Scenario] = {
     s.name: s
     for s in [
@@ -552,6 +672,23 @@ SCENARIOS: dict[str, Scenario] = {
                 + mmpp_dip_trace(net, rng, t_end=t_end, subset_frac=0.1),
                 key=lambda s: s.time,
             ),
+        ),
+        Scenario(
+            "edge-mesh-node-chaos",
+            "permanent blast-radius node failures under running jobs: a "
+            "24-node mesh whose sources pin to a protected sensor tier while "
+            "two 3-node compute racks die for good (correlated_failure_trace "
+            "with permanent=True, mtbf short enough to land mid-workload). "
+            "Without migration every running job placed on a dead rack "
+            "stalls forever (unfinished > 0); with a stall budget the "
+            "scheduler re-runs Algorithm 1 over the survivors, pays the "
+            "data-transfer penalty, and finishes everything — the scenario "
+            "the migration bench section gates.",
+            lambda rng: random_edge_network(
+                24, avg_degree=4.0, mean_bandwidth=1.2, rng=rng
+            ),
+            _chaos_arrivals,
+            make_churn=_chaos_churn,
         ),
         Scenario(
             "edge-cloud",

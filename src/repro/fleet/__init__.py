@@ -16,6 +16,7 @@ from .runtime import (
     FleetRuntime,
     FleetSim,
     build_async_fleet,
+    build_chaos_fleet,
     build_scenario_fleet,
 )
 from .telemetry import DispatchRecord, FleetTelemetry, RoundRecord
@@ -31,5 +32,6 @@ __all__ = [
     "FleetTelemetry",
     "RoundRecord",
     "build_async_fleet",
+    "build_chaos_fleet",
     "build_scenario_fleet",
 ]

@@ -64,6 +64,7 @@ __all__ = [
     "FleetResult",
     "FleetRuntime",
     "build_async_fleet",
+    "build_chaos_fleet",
     "build_scenario_fleet",
 ]
 
@@ -154,6 +155,44 @@ def build_async_fleet(
         rng = np.random.RandomState(90_000 + seed0 + i)
         t_end = max((t for t, _, _ in s.arrivals), default=0.0) * 1.25 + 10.0
         s.network_events = capacity_drift_trace(s.scheduler.net, rng, t_end=t_end)
+    return sims
+
+
+def build_chaos_fleet(
+    engine: JRBAEngine,
+    n_sims: int,
+    *,
+    n_jobs: int = 4,
+    name: str = "edge-mesh-node-chaos",
+    seed0: int = 0,
+    stall_budget: float | None = 1.0,
+    speculate: bool = True,
+) -> list[FleetSim]:
+    """Node-failure lanes for the migration benchmark and tests: every lane
+    runs the ``edge-mesh-node-chaos`` scenario (permanent correlated node
+    blasts, sources pinned to a protected tier — see ``core.scenarios``)
+    under OTFS, each carrying the scenario's own churn trace.
+    ``stall_budget`` enables stall-budget migration on every lane; pass
+    ``None`` for the migration-off reference (stranded jobs expected) and
+    ``speculate=False`` for the sequential migration reference that batched
+    re-solves must match record-for-record."""
+    sims = []
+    for i in range(n_sims):
+        net, arrivals, churn = SCENARIOS[name].build_churn(
+            seed=seed0 + i, n_jobs=n_jobs
+        )
+        sched = OnlineScheduler(
+            net,
+            "OTFS",
+            k_paths=engine.k,
+            jrba_iters=engine.n_iters,
+            stall_budget=stall_budget,
+            engine=engine,
+            speculate=speculate,
+        )
+        sims.append(
+            FleetSim(sched, arrivals, name=f"{name}/OTFS", network_events=churn)
+        )
     return sims
 
 

@@ -145,6 +145,7 @@ class FleetTelemetry:
         spec_accepted = sum(r.spec_accepted for r in results)
         spec_repaired = sum(r.spec_repaired for r in results)
         churn_events = sum(r.churn_events for r in results)
+        migration_checks = sum(r.migration_checks for r in results)
         self.summary = {
             "runtime": runtime,
             "n_sims": len(results),
@@ -198,6 +199,31 @@ class FleetTelemetry:
                     "spec_repaired": sum(r.churn_spec_repaired for r in results),
                 }
                 if churn_events
+                else None
+            ),
+            # stall-budget migration across the fleet: checks are stall-budget
+            # expiries (plus immediate node-failure triggers) that re-ran
+            # Algorithm 1 over the surviving nodes; migrations committed when
+            # the penalized migrated span beat the wait-for-recovery
+            # projection, rejected kept stall-and-wait, infeasible found no
+            # surviving placement; moved_tasks / penalty_seconds size the
+            # data-transfer cost, and spec_accepted / spec_repaired the
+            # speculate-then-repair outcome of batched migration re-solves.
+            # None when no lane ran with a stall budget (or nothing stalled).
+            "migration": (
+                {
+                    "checks": migration_checks,
+                    "migrations": sum(r.migrations for r in results),
+                    "rejected": sum(r.migration_rejected for r in results),
+                    "infeasible": sum(r.migration_infeasible for r in results),
+                    "moved_tasks": sum(r.migration_moved_tasks for r in results),
+                    "penalty_seconds": float(
+                        sum(r.migration_penalty_seconds for r in results)
+                    ),
+                    "spec_accepted": sum(r.migration_spec_accepted for r in results),
+                    "spec_repaired": sum(r.migration_spec_repaired for r in results),
+                }
+                if migration_checks
                 else None
             ),
             # solver-formulation telemetry for THIS run (mode, relaxation

@@ -278,26 +278,15 @@ def test_flash_churn_scenario_batched_resolves_match_sequential():
 
 
 # ---------------------------------------------------------------------------
-# EventTrace shim
+# EventTrace is the only churn input
 # ---------------------------------------------------------------------------
-def test_network_events_kwarg_is_a_deprecated_shim():
-    churn = [ChurnStep(2.0, (ChurnOp("capacity", link=(0, 1), capacity=1.0),))]
-    net, job = _bottleneck_with_remote_region()
-    arrivals = [(0.0, job("A"), 4.0)]
-    with pytest.warns(DeprecationWarning, match="EventTrace"):
-        a = OnlineScheduler(net, "OTFS", k_paths=2, jrba_iters=60).run(
-            arrivals, network_events=churn
-        )
-    net2, job2 = _bottleneck_with_remote_region()
-    b = OnlineScheduler(net2, "OTFS", k_paths=2, jrba_iters=60).run(
-        EventTrace([(0.0, job2("A"), 4.0)], churn=churn)
-    )
-    assert _records(a) == _records(b)
-
-
-def test_event_trace_rejects_conflicting_churn_inputs():
+def test_network_events_kwarg_removed():
+    """The PR-5 ``network_events=`` run() shim is gone: churn rides
+    ``EventTrace(arrivals, churn=...)`` exclusively."""
     net, job = _bottleneck_with_remote_region()
     churn = [ChurnStep(1.0, (ChurnOp("capacity", link=(0, 1), capacity=1.0),))]
     sched = OnlineScheduler(net, "OTFS", k_paths=2, jrba_iters=60)
-    with pytest.raises(TypeError, match="EventTrace"):
-        sched.run(EventTrace([(0.0, job("A"), 4.0)]), network_events=churn)
+    with pytest.raises(TypeError):
+        sched.run([(0.0, job("A"), 4.0)], network_events=churn)
+
+

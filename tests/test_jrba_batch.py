@@ -10,7 +10,6 @@ from repro.core import (
     fat_tree,
     hierarchical_edge_cloud,
     jrba,
-    jrba_batch,
     random_edge_network,
     random_flow_sets as _flow_sets,
     wan_mesh,
@@ -129,25 +128,3 @@ def test_path_cache_reuse_is_transparent():
         assert a.span == pytest.approx(b.span)
         assert a.routes == b.routes
 
-
-def test_jrba_batch_is_a_deprecated_alias():
-    """The free function survives one release as a warning shim over the
-    engine path and still returns the engine's results."""
-    net = NETS["edge-mesh"]()
-    sets = _flow_sets(net, 2, 3)
-    with pytest.warns(DeprecationWarning, match="JRBAEngine"):
-        bat = jrba_batch(net, sets, k=3, n_iters=100)
-    ref = JRBAEngine(k=3, n_iters=100).solve_many(net, sets)
-    for a, b in zip(bat, ref):
-        assert a.span == pytest.approx(b.span)
-        assert a.routes == b.routes
-
-
-def test_invalidate_network_is_a_deprecated_alias():
-    net = NETS["edge-mesh"]()
-    (flows,) = _flow_sets(net, 1, 4)
-    eng = JRBAEngine(k=3, n_iters=100)
-    eng.solve(net, flows)
-    with pytest.warns(DeprecationWarning, match="invalidate"):
-        eng.invalidate_network(net)
-    assert eng.stats.invalidations_full == 1

@@ -1,0 +1,323 @@
+"""Stall-budget migration under node failure.
+
+The contract under test: a permanent node failure strands every running job
+it stalls when migration is off (stall-and-wait never gets its recovery),
+while an ``OnlineScheduler`` with a ``stall_budget`` re-runs Algorithm 1
+over the surviving nodes, charges the data-transfer penalty for the bytes
+already materialized on the dead placement, and commits exactly when the
+migrated projection beats the wait-for-recovery projection — so under the
+``edge-mesh-node-chaos`` corpus (permanent correlated blasts, sources on a
+protected tier) every job finishes. Batched speculate-then-repair migration
+re-solves must reproduce the sequential migration reference record-for-
+record, dense and sparse solvers must agree bit-for-bit, and both fleet
+runtimes must drive the same records. The trace layer underneath: permanent
+failure traces carry no recovery ops, correlated groups die atomically in
+one ChurnStep, and ``ChurnEffect`` surfaces the failed/recovered node ids.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import (
+    ChurnEffect,
+    ChurnOp,
+    ChurnStep,
+    EventTrace,
+    JRBAEngine,
+    NetworkGraph,
+    OnlineScheduler,
+    apply_churn_step,
+    correlated_failure_trace,
+    get_scenario,
+    link_failure_trace,
+    node_failure_trace,
+)
+from repro.fleet import AsyncFleetRuntime, FleetRuntime, build_chaos_fleet
+
+SCENARIO = "edge-mesh-node-chaos"
+
+# seeds whose chaos trace provably stalls running jobs (validated: the
+# migration-off reference strands >= 1 job on each)
+LETHAL_SEEDS = (4, 6, 7)
+
+
+def _run(seed, *, stall_budget, n_jobs=4, speculate=True, solver="dense", engine=None):
+    net, arrivals, churn = get_scenario(SCENARIO).build_churn(seed=seed, n_jobs=n_jobs)
+    sched = OnlineScheduler(
+        net,
+        "OTFS",
+        k_paths=4,
+        jrba_iters=60,
+        stall_budget=stall_budget,
+        speculate=speculate,
+        solver=solver,
+        engine=engine,
+    )
+    return sched.run(EventTrace(arrivals, churn=churn))
+
+
+def _records(res):
+    return [
+        (r.scheduled, r.schedule_time, r.finish_time, r.span) for r in res.records
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Trace layer: permanent failures, correlated blasts, ChurnEffect node ids
+# ---------------------------------------------------------------------------
+def _line_net(n=4):
+    return NetworkGraph(
+        [10.0] * n, [8.0] * n, [(i, i + 1, 2.0) for i in range(n - 1)]
+    )
+
+
+def test_churn_effect_surfaces_node_ids():
+    net = _line_net()
+    eff = apply_churn_step(
+        net, ChurnStep(1.0, (ChurnOp("fail_node", node=1),))
+    )
+    assert eff.failed_nodes == (1,)
+    assert eff.recovered_nodes == ()
+    eff = apply_churn_step(
+        net, ChurnStep(2.0, (ChurnOp("recover_node", node=1),))
+    )
+    assert eff.failed_nodes == ()
+    assert eff.recovered_nodes == (1,)
+
+
+def test_churn_effect_ignores_noop_node_ops():
+    net = _line_net()
+    apply_churn_step(net, ChurnStep(1.0, (ChurnOp("fail_node", node=1),)))
+    # failing an already-dead node changes nothing — no id surfaced
+    eff = apply_churn_step(net, ChurnStep(2.0, (ChurnOp("fail_node", node=1),)))
+    assert eff.failed_nodes == ()
+
+
+def test_churn_effect_defaults_keep_positional_construction():
+    # consumers built before the node-id fields construct with 3 positionals
+    eff = ChurnEffect(np.zeros(3, dtype=bool), False, ())
+    assert eff.failed_nodes == () and eff.recovered_nodes == ()
+
+
+@pytest.mark.parametrize(
+    "gen", [node_failure_trace, link_failure_trace], ids=["node", "link"]
+)
+def test_permanent_traces_never_heal(gen):
+    net = _line_net(8)
+    steps = gen(net, np.random.RandomState(0), t_end=200.0, permanent=True)
+    assert steps, "trace empty — nothing failed before t_end"
+    kinds = [op.kind for s in steps for op in s.ops]
+    assert all(k in ("fail", "fail_node") for k in kinds)
+    # the non-permanent default still pairs every failure with a recovery
+    healing = gen(net, np.random.RandomState(0), t_end=200.0)
+    kinds = [op.kind for s in healing for op in s.ops]
+    assert any(k.startswith("recover") for k in kinds)
+
+
+def test_node_trace_pool_restriction():
+    net = _line_net(8)
+    steps = node_failure_trace(
+        net, np.random.RandomState(3), t_end=500.0, nodes=[2, 5]
+    )
+    hit = {op.node for s in steps for op in s.ops}
+    assert hit and hit <= {2, 5}
+
+
+def test_correlated_groups_fail_atomically():
+    net = _line_net(12)
+    rng = np.random.RandomState(1)
+    steps = correlated_failure_trace(
+        net, rng, t_end=300.0, n_groups=2, group_size=3, nodes=list(range(1, 11))
+    )
+    assert steps == sorted(steps, key=lambda s: s.time)
+    groups = set()
+    for s in steps:
+        kinds = {op.kind for op in s.ops}
+        assert len(kinds) == 1, "a step mixes failures and recoveries"
+        members = frozenset(op.node for op in s.ops)
+        assert len(members) == 3, "a group did not die/recover atomically"
+        assert all(1 <= n <= 10 for n in members)
+        groups.add(members)
+    assert len(groups) == 2
+    a, b = groups
+    assert not (a & b), "blast groups overlap"
+
+
+def test_correlated_permanent_is_one_blast_per_group():
+    net = _line_net(12)
+    steps = correlated_failure_trace(
+        net, np.random.RandomState(1), t_end=300.0, n_groups=2, group_size=3,
+        permanent=True,
+    )
+    assert len(steps) == 2
+    assert all(op.kind == "fail_node" for s in steps for op in s.ops)
+
+
+def test_chaos_scenario_protects_the_source_tier():
+    from repro.core.scenarios import _chaos_source_tier
+
+    net, arrivals, churn = get_scenario(SCENARIO).build_churn(seed=0, n_jobs=4)
+    protected = set(_chaos_source_tier(net))
+    assert len(protected) >= 2
+    blast = {op.node for s in churn for op in s.ops}
+    assert not (blast & protected), "chaos blast hit a pinned-source node"
+    for _, job, _ in arrivals:
+        pins = {t.pinned_node for t in job.tasks if t.pinned_node is not None}
+        assert pins <= protected
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: the stall-budget knob, stranding, and the rescue
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bad", [0.0, -1.0, float("inf"), float("nan")])
+def test_stall_budget_must_be_positive_finite(bad):
+    net = _line_net()
+    with pytest.raises(ValueError, match="stall_budget"):
+        OnlineScheduler(net, "OTFS", stall_budget=bad)
+
+
+def test_stall_budget_requires_otfs():
+    net = _line_net()
+    with pytest.raises(ValueError, match="OTFS"):
+        OnlineScheduler(net, "OTFA", stall_budget=1.0)
+
+
+def test_permanent_blast_strands_without_migration():
+    for seed in LETHAL_SEEDS:
+        res = _run(seed, stall_budget=None)
+        assert res.unfinished >= 1
+        stranded = [r for r in res.records if r.scheduled and not np.isfinite(r.span)]
+        assert len(stranded) == res.unfinished
+        assert res.migration_checks == 0 and res.migrations == 0
+
+
+def test_migration_rescues_every_stranded_job():
+    for seed in LETHAL_SEEDS:
+        res = _run(seed, stall_budget=1.0)
+        assert res.unfinished == 0
+        assert all(np.isfinite(r.span) for r in res.records if r.scheduled)
+        assert res.migrations >= 1
+        assert res.migration_moved_tasks >= res.migrations  # a move moves tasks
+        assert res.migration_penalty_seconds >= 0.0
+        assert res.migration_checks >= res.migrations
+
+
+def test_rejected_checks_back_off_then_commit():
+    # seed 4's blast leaves migration initially unattractive: the decision
+    # rejects while the wait-projection is short, then the doubling backoff
+    # window makes a later check win — both sides of the decision fire
+    res = _run(4, stall_budget=1.0)
+    assert res.migration_rejected >= 1
+    assert res.migrations >= 1
+    assert 0.0 < res.migration_commit_rate < 1.0
+
+
+def test_migration_off_is_the_default():
+    net, arrivals, churn = get_scenario(SCENARIO).build_churn(seed=4, n_jobs=4)
+    sched = OnlineScheduler(net, "OTFS", k_paths=4, jrba_iters=60)
+    assert sched.stall_budget is None
+    res = sched.run(EventTrace(arrivals, churn=churn))
+    assert res.migration_checks == 0
+
+
+# ---------------------------------------------------------------------------
+# Record identity: batched vs sequential, dense vs sparse
+# ---------------------------------------------------------------------------
+def test_batched_migration_matches_sequential_records():
+    accepted = 0
+    for seed in LETHAL_SEEDS:
+        seq = _run(seed, stall_budget=1.0, speculate=False)
+        spec = _run(seed, stall_budget=1.0, speculate=True)
+        assert _records(seq) == _records(spec)
+        assert seq.migrations == spec.migrations
+        assert seq.migration_checks == spec.migration_checks
+        accepted += spec.migration_spec_accepted
+    assert accepted >= 1, "batched path never accepted a speculative entry"
+
+
+def test_dense_sparse_records_identical_with_migration():
+    for seed in LETHAL_SEEDS:
+        dense = _run(seed, stall_budget=1.0, solver="dense")
+        sparse = _run(seed, stall_budget=1.0, solver="sparse")
+        assert _records(dense) == _records(sparse)
+        assert dense.migrations == sparse.migrations
+
+
+# ---------------------------------------------------------------------------
+# Fleet runtimes + telemetry
+# ---------------------------------------------------------------------------
+def test_async_runtime_matches_lockstep_and_rescues():
+    eng_l = JRBAEngine(k=4, n_iters=60)
+    eng_a = JRBAEngine(k=4, n_iters=60)
+    lanes = 5  # seed0=4 puts every lethal seed in the fleet
+    lock = FleetRuntime(eng_l, mode="lockstep").run(
+        build_chaos_fleet(eng_l, lanes, n_jobs=4, seed0=4, stall_budget=1.0)
+    )
+    asyn = AsyncFleetRuntime(eng_a).run(
+        build_chaos_fleet(eng_a, lanes, n_jobs=4, seed0=4, stall_budget=1.0)
+    )
+    assert lock.unfinished == 0 and asyn.unfinished == 0
+    for a, b in zip(lock.results, asyn.results):
+        assert _records(a) == _records(b)
+    assert sum(r.migrations for r in asyn.results) >= 1
+
+
+def test_telemetry_migration_block():
+    eng = JRBAEngine(k=4, n_iters=60)
+    rt = FleetRuntime(eng, mode="lockstep")
+    res = rt.run(build_chaos_fleet(eng, 3, n_jobs=4, seed0=4, stall_budget=1.0))
+    mig = res.telemetry.summary["migration"]
+    assert mig is not None
+    assert mig["checks"] >= 1 and mig["migrations"] >= 1
+    assert mig["checks"] >= mig["migrations"] + mig["rejected"]
+    assert mig["penalty_seconds"] >= 0.0
+    assert mig["moved_tasks"] >= mig["migrations"]
+
+
+def test_telemetry_migration_block_none_when_off():
+    eng = JRBAEngine(k=4, n_iters=60)
+    rt = FleetRuntime(eng, mode="lockstep")
+    res = rt.run(build_chaos_fleet(eng, 2, n_jobs=4, seed0=4, stall_budget=None))
+    assert res.telemetry.summary["migration"] is None
+
+
+# ---------------------------------------------------------------------------
+# The liveness property
+# ---------------------------------------------------------------------------
+_ENGINES = {}
+
+
+def _engine(solver):
+    if solver not in _ENGINES:
+        _ENGINES[solver] = JRBAEngine(k=3, n_iters=50, solver=solver)
+    return _ENGINES[solver]
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=20),
+    solver=st.sampled_from(["dense", "sparse"]),
+    runtime=st.sampled_from(["lockstep", "async"]),
+)
+def test_liveness_no_job_ends_with_nonfinite_span(seed, solver, runtime):
+    """With migration on, no job ends a chaos simulation stranded: the
+    protected source tier guarantees at least one feasible placement
+    survives every blast, the backoff makes the wait-projection grow
+    unboundedly, so a permanently dead placement eventually loses to any
+    feasible migration — across solver formulations and both fleet
+    runtimes."""
+    eng = _engine(solver)
+    rt = (
+        AsyncFleetRuntime(eng)
+        if runtime == "async"
+        else FleetRuntime(eng, mode="lockstep")
+    )
+    res = rt.run(
+        build_chaos_fleet(eng, 1, n_jobs=3, seed0=seed, stall_budget=0.5)
+    )
+    assert res.unfinished == 0
+    for sim in res.results:
+        for rec in sim.records:
+            if rec.scheduled:
+                assert np.isfinite(rec.span)
+                assert np.isfinite(rec.finish_time)
