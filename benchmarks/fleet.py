@@ -73,7 +73,6 @@ from the ``--out`` stem, so CI jobs only name the stem once.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -101,6 +100,7 @@ from repro.fleet import (  # noqa: E402
     build_scenario_fleet,
 )
 from repro.obs import Tracer  # noqa: E402
+from repro.obs.trace import dumps_strict  # noqa: E402
 
 BATCH_POLICIES = ("OTFS", "OTFA")
 
@@ -1001,7 +1001,7 @@ def main() -> None:
         ),
     }
     with open(args.out, "w") as f:
-        json.dump(report, f, indent=2)
+        f.write(dumps_strict(report, indent=2))
     print(f"wrote {args.out} (+ {trace_path}, {async_trace_path})")
     if not args.smoke:
         dev = report["batch"]["max_span_rel_dev"]

@@ -1,7 +1,14 @@
-"""Repo-root pytest config: make `pytest` work without PYTHONPATH=src."""
+"""Repo-root pytest config: make `pytest` work without PYTHONPATH=src, and
+arm the runtime mutation sanitizer when REPRO_SANITIZE=1 (a fast-suite CI
+leg) so every NetworkGraph/JRBAEngine the tests construct is audited."""
 import os
 import sys
 
 _SRC = os.path.join(os.path.dirname(__file__), "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
+
+from repro.analysis import sanitizer as _sanitizer  # noqa: E402
+
+if _sanitizer.enabled():
+    _sanitizer.install()

@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""reprolint — the repo-native static-analysis suite.
+
+Runs the four repro.analysis passes (cache coherence CC1xx, JIT purity JP2xx,
+determinism DT3xx, telemetry strictness TS4xx) over the given paths and
+reports findings ruff-style (``path:line:col: RULE message``). Exit code 1
+when anything is found, 0 when clean.
+
+Usage:
+    python scripts/reprolint.py                  # lint src benchmarks scripts
+    python scripts/reprolint.py src/repro/core   # lint a subtree
+    python scripts/reprolint.py --json out.json  # machine-readable findings
+    python scripts/reprolint.py --select DT302   # one rule only
+    python scripts/reprolint.py --list-rules     # the rule catalog
+
+Suppressions: ``# reprolint: allow[RULE] -- reason`` on the flagged line or a
+comment line directly above it; the reason is mandatory. Stdlib-only — runs
+on the minimal CI env without jax.
+"""
+import argparse
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "src"))
+
+from repro.analysis import all_rules, lint_paths  # noqa: E402
+from repro.obs.trace import dumps_strict  # noqa: E402
+
+DEFAULT_PATHS = ("src", "benchmarks", "scripts")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="reprolint", description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", help=f"files/dirs to lint (default: {DEFAULT_PATHS})")
+    ap.add_argument("--json", metavar="OUT", help="also write findings as JSON ('-' for stdout)")
+    ap.add_argument("--select", action="append", metavar="RULE", help="restrict to these rule ids")
+    ap.add_argument("--root", default=_REPO, help="repo root for pass scoping (default: repo)")
+    ap.add_argument("--list-rules", action="store_true", help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            print(f"{rule.id}  {rule.summary}")
+        return 0
+
+    paths = args.paths or [os.path.join(args.root, p) for p in DEFAULT_PATHS]
+    findings = lint_paths(paths, root=args.root, select=args.select)
+
+    def _relativize(f):
+        path = os.path.relpath(os.path.abspath(f.path), args.root)
+        return f.__class__(path, f.line, f.col, f.rule, f.message)
+
+    rel = [_relativize(f) for f in findings]
+    for f in rel:
+        print(f.format())
+    if args.json:
+        payload = {
+            "findings": [f.to_json() for f in rel],
+            "n_findings": len(rel),
+            "paths": [os.path.relpath(os.path.abspath(p), args.root) for p in paths],
+        }
+        if args.json == "-":
+            print(dumps_strict(payload, indent=2))
+        else:
+            with open(args.json, "w") as fh:
+                fh.write(dumps_strict(payload, indent=2) + "\n")
+    if rel:
+        print(f"reprolint: {len(rel)} finding(s)", file=sys.stderr)
+        return 1
+    print(f"reprolint: clean ({len(paths)} path(s))", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

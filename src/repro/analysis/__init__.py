@@ -1,0 +1,35 @@
+"""repro.analysis — the repo-native static-analysis suite + runtime sanitizer.
+
+Static half (stdlib-only, importable without jax): an AST lint framework
+(:mod:`.framework`) with four repo-specific passes under :mod:`.passes` —
+cache coherence (CC1xx), JIT purity (JP2xx), determinism (DT3xx) and
+telemetry strictness (TS4xx) — driven by ``scripts/reprolint.py``. Every bug
+class the passes encode was paid for with a real debugging cycle first (see
+each pass's module docstring for the incident it fossilizes).
+
+Runtime half (:mod:`.sanitizer`, imports the core lazily): ``REPRO_SANITIZE=1``
+wraps every :class:`~repro.core.graph.NetworkGraph` in a mutation auditor
+that asserts each capacity/topology mutation bumped the matching epoch
+counter, and arms a serve-time check that :class:`~repro.core.jrba.JRBAEngine`
+never answers from a program cache whose topology epoch is stale.
+"""
+
+from .framework import (
+    Finding,
+    LintPass,
+    Rule,
+    all_rules,
+    default_passes,
+    lint_paths,
+    lint_source,
+)
+
+__all__ = [
+    "Finding",
+    "LintPass",
+    "Rule",
+    "all_rules",
+    "default_passes",
+    "lint_paths",
+    "lint_source",
+]

@@ -1,0 +1,14 @@
+"""The four repo-specific lint passes (see each module's docstring for the
+bug class it encodes and the incident that motivated it)."""
+
+from .cache_coherence import CacheCoherencePass
+from .determinism import DeterminismPass
+from .jit_purity import JitPurityPass
+from .telemetry import TelemetryStrictnessPass
+
+__all__ = [
+    "CacheCoherencePass",
+    "DeterminismPass",
+    "JitPurityPass",
+    "TelemetryStrictnessPass",
+]

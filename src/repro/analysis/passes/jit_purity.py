@@ -1,0 +1,359 @@
+"""JIT purity & recompile-hazard pass (JP2xx).
+
+Inside a traced region — a function staged by ``jax.jit``/``vmap``, a
+``lax.scan``/``while_loop``/``fori_loop``/``cond`` body, or a Pallas kernel —
+the usual Python escape hatches are either trace-time errors or silent
+performance cliffs:
+
+* ``JP201`` — host syncs: ``float()``/``int()``/``bool()``/``.item()``/
+  ``np.asarray()`` on a traced value either raises ``TracerConversionError``
+  or (under ``io_callback``-style shims) forces a device round-trip per call.
+* ``JP202`` — Python ``if``/``while`` on a traced value: data-dependent
+  control flow must go through ``lax.cond``/``lax.select``/``jnp.where``.
+  Parameters declared in ``static_argnames``/``static_argnums`` are exempt —
+  branching on them is the supported specialization mechanism.
+* ``JP203`` — closure over mutable instance/module state (``self.x``, a
+  module-level list/dict/set): the value is baked in at trace time, so later
+  mutations are silently ignored — the jit-cached-stale-state analogue of
+  the scheduler's CC1xx epoch bugs.
+* ``JP204`` — a static arg whose default is an unhashable literal
+  (list/dict/set): every call re-specializes or raises ``Unhashable`` at the
+  jit cache, the classic accidental-recompile hazard.
+
+The pass reasons about names, not types: a value is "traced" when it is
+rooted at a non-static parameter of the region function and the root chain
+never passes through a shape-like attribute (``.shape``/``.dtype``/…). This
+is deliberately first-order — deeper dataflow buys recall at the price of
+false positives, and the suppression syntax covers the judgment calls.
+"""
+from __future__ import annotations
+
+import ast
+from collections import ChainMap
+
+from ..framework import LintPass, Rule
+
+# attribute hops that turn a traced root into static metadata
+STATIC_ATTRS = frozenset({"shape", "dtype", "ndim", "size", "aval", "weak_type", "sharding"})
+# builtins whose result is static regardless of the argument
+STATIC_FUNCS = frozenset({"len", "isinstance", "type", "hasattr", "getattr", "callable"})
+HOST_CASTS = frozenset({"float", "int", "bool", "complex"})
+HOST_METHODS = frozenset({"item", "tolist", "to_py"})
+NUMPY_ALIASES = frozenset({"np", "numpy", "onp"})
+NUMPY_SYNCS = frozenset({"asarray", "array", "float32", "float64", "int32", "int64"})
+LAX_BODIES = {
+    "scan": (0,),
+    "while_loop": (0, 1),
+    "fori_loop": (2,),
+    "cond": (1, 2),
+    "map": (0,),
+    "associative_scan": (0,),
+}
+BRANCH_KINDS = {"If": "if", "While": "while", "IfExp": "ternary", "Assert": "assert"}
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` -> ``"a.b.c"`` (None for anything fancier)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    d = _dotted(node)
+    return d is not None and (d in ("jit", "pjit") or d.endswith(".jit") or d.endswith(".pjit"))
+
+
+def _is_partial_expr(node: ast.AST) -> bool:
+    d = _dotted(node)
+    return d in ("partial", "functools.partial")
+
+
+def _const_strs(node: ast.AST) -> list[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts if isinstance(e, ast.Constant)]
+    return []
+
+
+def _const_ints(node: ast.AST) -> list[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts if isinstance(e, ast.Constant)]
+    return []
+
+
+def _jit_statics(call: ast.Call) -> tuple[set[str], set[int]]:
+    names: set[str] = set()
+    nums: set[int] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            names.update(_const_strs(kw.value))
+        elif kw.arg == "static_argnums":
+            nums.update(_const_ints(kw.value))
+    return names, nums
+
+
+def _param_names(fn: ast.AST) -> list[str]:
+    a = fn.args
+    return [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+
+
+def _resolve_statics(fn: ast.AST, names: set[str], nums: set[int]) -> set[str]:
+    params = _param_names(fn)
+    out = set(names)
+    for i in nums:
+        if 0 <= i < len(params):
+            out.add(params[i])
+    return out
+
+
+def _unhashable_default(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        d = _dotted(node.func)
+        return d in ("list", "dict", "set", "bytearray")
+    return False
+
+
+class _Region:
+    """One traced function plus the params exempted as static."""
+
+    __slots__ = ("fn", "statics", "kind")
+
+    def __init__(self, fn: ast.AST, statics: set[str], kind: str):
+        self.fn = fn
+        self.statics = statics
+        self.kind = kind
+
+
+class JitPurityPass(LintPass):
+    name = "jit-purity"
+    rules = (
+        Rule("JP201", "host sync (float()/.item()/np.asarray) on a traced value inside jit"),
+        Rule("JP202", "Python branch on a traced value inside jit (use lax.cond/jnp.where)"),
+        Rule("JP203", "jit region closes over mutable instance/module state"),
+        Rule("JP204", "static jit arg with an unhashable (list/dict/set) default"),
+    )
+
+    def run(self, tree: ast.Module, relpath: str) -> list[tuple[int, int, str, str]]:
+        self._module_mutables = {
+            t.id
+            for stmt in tree.body
+            if isinstance(stmt, ast.Assign) and _unhashable_default(stmt.value)
+            for t in stmt.targets
+            if isinstance(t, ast.Name)
+        }
+        regions: dict[int, _Region] = {}
+        self._collect(tree.body, ChainMap({}), regions)
+        out: list[tuple[int, int, str, str]] = []
+        for region in regions.values():
+            self._check_region(region, out)
+        return out
+
+    # -- region discovery ---------------------------------------------------
+    def _collect(self, body: list, scope: ChainMap, regions: dict) -> None:
+        """One lexical scope: register every local function def first, then
+        classify marker calls against the completed scope (a ``jax.vmap(f)``
+        may precede ``def f`` in source order within the walk), then recurse
+        into each nested scope. Class bodies become their own scope — method
+        names are invisible to enclosing code, so ``Engine.solve`` must never
+        shadow a local ``def solve`` at module level."""
+        local: dict = {}
+        scope = scope.new_child(local)
+        nested: list = []
+        calls: list = []
+        stack = list(body)
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                local[node.name] = node
+                self._classify_decorators(node, regions)
+                nested.append(node.body)
+                stack.extend(node.decorator_list)
+                continue
+            if isinstance(node, ast.ClassDef):
+                nested.append(node.body)
+                stack.extend(node.decorator_list)
+                continue
+            if isinstance(node, ast.Lambda):
+                nested.append([ast.Expr(value=node.body)])
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Lambda):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        local[t.id] = node.value
+            if isinstance(node, ast.Call):
+                calls.append(node)
+            stack.extend(ast.iter_child_nodes(node))
+        for call in calls:
+            self._classify_call(call, scope, regions)
+        for b in nested:
+            self._collect(b, scope, regions)
+
+    def _mark(self, fn, statics: set[str], nums: set[int], kind: str, regions: dict) -> None:
+        if fn is None or not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            return
+        if id(fn) not in regions:
+            regions[id(fn)] = _Region(fn, _resolve_statics(fn, statics, nums), kind)
+
+    def _classify_decorators(self, fn: ast.FunctionDef, regions: dict) -> None:
+        for dec in fn.decorator_list:
+            if _is_jit_expr(dec):
+                self._mark(fn, set(), set(), "jit", regions)
+            elif isinstance(dec, ast.Call):
+                if _is_jit_expr(dec.func):
+                    names, nums = _jit_statics(dec)
+                    self._mark(fn, names, nums, "jit", regions)
+                elif _is_partial_expr(dec.func) and dec.args and _is_jit_expr(dec.args[0]):
+                    names, nums = _jit_statics(dec)
+                    self._mark(fn, names, nums, "jit", regions)
+
+    def _classify_call(self, call: ast.Call, scope: ChainMap, regions: dict) -> None:
+        def target(i: int):
+            if i >= len(call.args):
+                return None
+            arg = call.args[i]
+            if isinstance(arg, ast.Lambda):
+                return arg
+            if isinstance(arg, ast.Name):
+                return scope.get(arg.id)
+            return None
+
+        func = call.func
+        d = _dotted(func) or ""
+        leaf = d.rsplit(".", 1)[-1]
+        if _is_jit_expr(func):
+            names, nums = _jit_statics(call)
+            self._mark(target(0), names, nums, "jit", regions)
+        elif isinstance(func, ast.Call) and _is_partial_expr(func.func):
+            # functools.partial(jax.jit, static_argnames=...)(f)
+            if func.args and _is_jit_expr(func.args[0]):
+                names, nums = _jit_statics(func)
+                self._mark(target(0), names, nums, "jit", regions)
+        elif leaf == "vmap" or leaf == "pmap":
+            self._mark(target(0), set(), set(), "vmap", regions)
+        elif leaf == "pallas_call":
+            self._mark(target(0), set(), set(), "pallas", regions)
+        elif leaf in LAX_BODIES and ("lax" in d or d == leaf):
+            for i in LAX_BODIES[leaf]:
+                self._mark(target(i), set(), set(), f"lax.{leaf}", regions)
+
+    # -- region checks ------------------------------------------------------
+    def _check_region(self, region: _Region, out: list) -> None:
+        fn = region.fn
+        tracked = set(_param_names(fn)) - region.statics
+        label = getattr(fn, "name", "<lambda>")
+        if region.kind == "jit" and not isinstance(fn, ast.Lambda):
+            self._check_static_defaults(fn, region.statics, out)
+        body = fn.body if isinstance(fn.body, list) else [ast.Expr(value=fn.body)]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                self._check_node(node, tracked, label, region, out)
+
+    def _check_static_defaults(self, fn: ast.FunctionDef, statics: set[str], out: list) -> None:
+        a = fn.args
+        pos = [*a.posonlyargs, *a.args]
+        for p, default in zip(pos[len(pos) - len(a.defaults) :], a.defaults):
+            if p.arg in statics and _unhashable_default(default):
+                msg = (
+                    f"static arg '{p.arg}' of '{fn.name}' defaults to an unhashable "
+                    "literal — every call misses the jit cache (or raises Unhashable)"
+                )
+                out.append((default.lineno, default.col_offset + 1, "JP204", msg))
+
+    def _check_node(self, node: ast.AST, tracked: set[str], label: str, region, out) -> None:
+        if isinstance(node, ast.Call):
+            d = _dotted(node.func) or ""
+            leaf = d.rsplit(".", 1)[-1]
+            if (
+                isinstance(node.func, ast.Name)
+                and node.func.id in HOST_CASTS
+                and node.args
+                and self._roots(node.args[0]) & tracked
+            ):
+                msg = (
+                    f"{node.func.id}() on traced value inside '{label}' — host sync "
+                    "(TracerConversionError at trace time)"
+                )
+                out.append((node.lineno, node.col_offset + 1, "JP201", msg))
+            elif (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr in HOST_METHODS
+                and self._roots(node.func.value) & tracked
+            ):
+                msg = f".{node.func.attr}() on traced value inside '{label}' — host sync"
+                out.append((node.lineno, node.col_offset + 1, "JP201", msg))
+            elif (
+                d.split(".", 1)[0] in NUMPY_ALIASES
+                and leaf in NUMPY_SYNCS
+                and any(self._roots(a) & tracked for a in node.args)
+            ):
+                msg = (
+                    f"{d}() on traced value inside '{label}' — silently falls back to "
+                    "host numpy (sync + constant-folds the tracer)"
+                )
+                out.append((node.lineno, node.col_offset + 1, "JP201", msg))
+        elif isinstance(node, (ast.If, ast.While, ast.IfExp, ast.Assert)):
+            test = node.test
+            hits = self._roots(test) & tracked
+            if hits:
+                kind = BRANCH_KINDS[type(node).__name__]
+                msg = (
+                    f"Python {kind} on traced value '{sorted(hits)[0]}' inside '{label}' — "
+                    "use lax.cond/lax.select/jnp.where (or declare the arg static)"
+                )
+                out.append((test.lineno, test.col_offset + 1, "JP202", msg))
+        elif isinstance(node, ast.Attribute) and isinstance(node.ctx, ast.Load):
+            if isinstance(node.value, ast.Name) and node.value.id == "self":
+                msg = (
+                    f"'self.{node.attr}' read inside traced '{label}' — instance state is "
+                    "baked in at trace time; pass it as an argument"
+                )
+                out.append((node.lineno, node.col_offset + 1, "JP203", msg))
+        elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            if node.id in self._module_mutables and node.id not in tracked:
+                msg = (
+                    f"module-level mutable '{node.id}' read inside traced '{label}' — "
+                    "its value is frozen at trace time"
+                )
+                out.append((node.lineno, node.col_offset + 1, "JP203", msg))
+
+    # -- traced-root extraction --------------------------------------------
+    def _roots(self, expr: ast.AST) -> set[str]:
+        """Names an expression's value is data-dependent on, stopping at
+        shape-like attributes and static builtins."""
+        if isinstance(expr, ast.Name):
+            return {expr.id}
+        if isinstance(expr, ast.Attribute):
+            return set() if expr.attr in STATIC_ATTRS else self._roots(expr.value)
+        if isinstance(expr, ast.Subscript):
+            return self._roots(expr.value)
+        if isinstance(expr, (ast.BinOp,)):
+            return self._roots(expr.left) | self._roots(expr.right)
+        if isinstance(expr, ast.UnaryOp):
+            return self._roots(expr.operand)
+        if isinstance(expr, ast.BoolOp):
+            return set().union(*(self._roots(v) for v in expr.values))
+        if isinstance(expr, ast.Compare):
+            return self._roots(expr.left).union(*(self._roots(c) for c in expr.comparators))
+        if isinstance(expr, ast.Call):
+            d = _dotted(expr.func)
+            if d in STATIC_FUNCS:
+                return set()
+            if isinstance(expr.func, ast.Attribute):
+                roots = self._roots(expr.func.value)
+                for a in expr.args:
+                    roots |= self._roots(a)
+                return roots
+            return set()
+        if isinstance(expr, (ast.Tuple, ast.List)):
+            return set().union(set(), *(self._roots(e) for e in expr.elts))
+        return set()

@@ -1085,13 +1085,24 @@ class OnlineScheduler:
             (res,) = yield from solve_round(
                 [SolveRequest(net, all_flows, net.capacity, self.water_fill)]
             )
-            lookup = {
-                id(f): (b, route)
-                for f, b, route in zip(res.flows, res.bandwidth, res.routes)
-            }
+            # ``res.flows`` is the order-preserving subsequence of
+            # ``all_flows`` that survived the solver's colocated/zero-volume
+            # filter, so results align positionally — each record owns the
+            # contiguous slice its flows occupied in ``all_flows``. (An
+            # ``id()``-keyed lookup here would be reuse-hazardous and
+            # order-opaque — the determinism lint forbids it.)
+            per_flow: list[tuple[float, list[int]]] = [(0.0, [])] * len(all_flows)
+            j = 0
+            for i, f in enumerate(all_flows):
+                if j < len(res.flows) and res.flows[j] is f:
+                    per_flow[i] = (res.bandwidth[j], res.routes[j])
+                    j += 1
+            off = 0
             for r in q_run:
-                r.bandwidths = np.array([lookup[id(f)][0] for f in r.flows])
-                r.routes = [lookup[id(f)][1] for f in r.flows]
+                chunk = per_flow[off : off + len(r.flows)]
+                off += len(r.flows)
+                r.bandwidths = np.array([b for b, _ in chunk])
+                r.routes = [route for _, route in chunk]
                 r.span = job_span(net, r.alloc, r.flows, r.bandwidths)
                 set_finish_event(r, now)
             net.residual = np.maximum(net.capacity - res.link_load, 0.0)

@@ -53,7 +53,12 @@ def dijkstra(
         seen.add(u)
         if u == dst:
             break
-        for v in net.neighbors(u):
+        # sorted: neighbors is a set, and decision paths must not iterate
+        # unordered collections (DT301). Order-neutral here — each v is a
+        # distinct dist key and ties across nodes break on the heap's
+        # (cost, node) tuple — but sorting makes that a construction-time
+        # guarantee instead of a CPython-int-hashing accident.
+        for v in sorted(net.neighbors(u)):
             key = (min(u, v), max(u, v))
             if v in banned_nodes or key in banned_links:
                 continue

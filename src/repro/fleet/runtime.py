@@ -748,6 +748,9 @@ class FleetRuntime:
                     bucket=str(key),
                     fired_by=cause,
                     n_solves=len(take),
+                    # reprolint: allow[DT302] -- cardinality count of live
+                    # steppers; the set is only len()'d, never iterated or
+                    # keyed into, so id() reuse/order can't leak into records
                     n_lanes=len({id(e.inflight) for e in take}),
                     queue_depth=depth,
                     batch_calls=batch_calls,

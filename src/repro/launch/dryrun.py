@@ -34,12 +34,22 @@ from ..models import hints  # noqa: E402
 from ..optim import AdamWConfig  # noqa: E402
 from ..train import TrainConfig, init_train_state, make_train_step  # noqa: E402
 from .mesh import batch_axes, make_production_mesh  # noqa: E402
+from ..obs.trace import dumps_strict  # noqa: E402
 from .sharding import (  # noqa: E402
     batch_specs,
     tree_cache_specs,
     tree_param_specs,
     train_state_specs,
 )
+
+
+def record_line(rec: dict) -> str:
+    """One dry-run result as an RFC-8259-strict JSONL line. A failed cell can
+    carry non-finite timings (``compile_s=inf`` on timeout paths), which bare
+    ``json.dumps`` would emit as the non-standard ``Infinity`` token that
+    strict parsers (and the trace tooling) reject — route through the shared
+    sanitizer instead."""
+    return dumps_strict(rec) + "\n"
 
 # ---------------------------------------------------------------------------
 # input specs (ShapeDtypeStruct stand-ins, no allocation)
@@ -361,7 +371,7 @@ def main() -> None:
                 )
                 if tb and not rec["ok"]:
                     print(tb)
-                f.write(json.dumps(rec) + "\n")
+                f.write(record_line(rec))
                 f.flush()
 
 

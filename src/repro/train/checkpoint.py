@@ -11,7 +11,6 @@ checkpoint; ``latest_step`` scans for complete snapshots only.
 from __future__ import annotations
 
 import importlib
-import json
 import os
 import re
 import threading
@@ -20,6 +19,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from ..obs.trace import dumps_strict
 
 __all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]
 
@@ -68,7 +69,7 @@ def save(directory: str, step: int, tree: Any, *, shard_id: int = 0) -> str:
         f.write(msgpack.packb(payload, use_bin_type=True))
     os.replace(tmp, final)
     with open(os.path.join(d, "meta.json"), "w") as f:
-        json.dump({"step": step, "n_leaves": len(flat)}, f)
+        f.write(dumps_strict({"step": step, "n_leaves": len(flat)}))
     with open(os.path.join(d, _FLAG), "w") as f:
         f.write("ok")
     return final

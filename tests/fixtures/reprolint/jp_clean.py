@@ -1,0 +1,38 @@
+"""Clean fixture: the same shapes written purely — zero JP findings."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def good_branch(x, y):
+    return jnp.where(x > 0, y, -y)
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def good_static(x, mode="fast"):
+    if mode == "fast":  # static arg: branching on it is specialization
+        return x * 2
+    return x
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def good_static_num(x, n):
+    if n > 3:  # static by position
+        return x * n
+    return x
+
+
+@jax.jit
+def good_shape(x):
+    if x.shape[0] > 4:  # .shape is trace-time metadata, not a tracer
+        return x[:4]
+    return x
+
+
+def scan_good(xs):
+    def step(carry, x):
+        return carry + jnp.where(x > 0, 1, 0), x
+
+    return jax.lax.scan(step, 0, xs)

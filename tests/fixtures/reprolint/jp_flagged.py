@@ -1,0 +1,39 @@
+"""Flagged fixture: every JP2xx rule fires at least once.
+
+Pure syntax — never imported, so the jax calls never run."""
+import functools
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def bad_branch(x, y):
+    if x > 0:  # JP202: Python branch on a traced value
+        return float(y)  # JP201: host cast
+    return np.asarray(y)  # JP201: silent host-numpy fallback
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def bad_static_default(x, cfg=[1, 2]):  # JP204: unhashable static default
+    return x
+
+
+class Solver:
+    scale = 2.0
+
+    def compiled(self):
+        @jax.jit
+        def inner(z):
+            return z * self.scale  # JP203: instance state baked in at trace
+
+        return inner
+
+
+def scan_bad(xs):
+    def step(carry, x):
+        if x > 0:  # JP202: branch inside a lax.scan body
+            carry = carry + 1
+        return carry, x
+
+    return jax.lax.scan(step, 0, xs)

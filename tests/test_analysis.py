@@ -1,0 +1,268 @@
+"""The static-analysis suite (reprolint) and the runtime mutation sanitizer.
+
+Three layers:
+
+* fixture corpora — every rule fires on its flagged fixture and stays quiet
+  on the clean one (``lint_source(scoped=False)`` so fixtures exercise a
+  pass without living at the repo path it patrols);
+* the CLI — exits non-zero on each flagged fixture, zero on the whole repo
+  (the lint-clean contract the CI job enforces), and emits parseable
+  ``--json``;
+* the sanitizer — clean churn passes, a monkeypatched mutator that forgets
+  its epoch bump raises, and an engine build under a dodged topology epoch
+  raises.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.analysis import lint_paths, lint_source
+from repro.analysis.framework import BAD_SUPPRESSION, PARSE_ERROR, all_rules
+from repro.analysis.passes import (
+    CacheCoherencePass,
+    DeterminismPass,
+    JitPurityPass,
+    TelemetryStrictnessPass,
+)
+from repro.analysis.sanitizer import SanitizerError, audit_graph, install
+from repro.core.graph import Flow, NetworkGraph, random_edge_network
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(REPO, "tests", "fixtures", "reprolint")
+REPROLINT = os.path.join(REPO, "scripts", "reprolint.py")
+
+PASSES = {
+    "cc": CacheCoherencePass,
+    "jp": JitPurityPass,
+    "dt": DeterminismPass,
+    "ts": TelemetryStrictnessPass,
+}
+FLAGGED = {
+    "cc": ("cc_flagged.py", {"CC101", "CC102", "CC103", "CC104"}),
+    "jp": ("jp_flagged.py", {"JP201", "JP202", "JP203", "JP204"}),
+    "dt": (os.path.join("core", "dt_flagged.py"), {"DT301", "DT302", "DT303", "DT304"}),
+    "ts": ("ts_flagged.py", {"TS401"}),
+}
+CLEAN = {
+    "cc": "cc_clean.py",
+    "jp": "jp_clean.py",
+    "dt": os.path.join("core", "dt_clean.py"),
+    "ts": "ts_clean.py",
+}
+
+
+def lint_fixture(relname, pass_cls):
+    path = os.path.join(FIXTURES, relname)
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    return lint_source(source, path, [pass_cls()], scoped=False)
+
+
+def run_cli(*args):
+    return subprocess.run(
+        [sys.executable, REPROLINT, *args], capture_output=True, text=True, cwd=REPO
+    )
+
+
+# ---------------------------------------------------------------------------
+# fixture corpora
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("key", sorted(FLAGGED))
+def test_flagged_fixture_fires_every_rule(key):
+    relname, expected = FLAGGED[key]
+    found = {f.rule for f in lint_fixture(relname, PASSES[key])}
+    assert expected <= found, f"missing rules: {expected - found}"
+
+
+@pytest.mark.parametrize("key", sorted(CLEAN))
+def test_clean_fixture_is_quiet(key):
+    findings = lint_fixture(CLEAN[key], PASSES[key])
+    assert findings == [], [f.format() for f in findings]
+
+
+def test_findings_are_sorted_and_formatted():
+    findings = lint_fixture(FLAGGED["dt"][0], DeterminismPass)
+    assert findings == sorted(findings)
+    f = findings[0]
+    assert f.format().startswith(f"{f.path}:{f.line}:{f.col}: {f.rule} ")
+    assert set(f.to_json()) == {"path", "line", "col", "rule", "message"}
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+def test_reasoned_allow_suppresses():
+    findings = lint_fixture("suppress_ok.py", TelemetryStrictnessPass)
+    assert findings == [], [f.format() for f in findings]
+
+
+def test_reasonless_allow_reports_and_does_not_suppress():
+    rules = [f.rule for f in lint_fixture("suppress_bad.py", TelemetryStrictnessPass)]
+    assert BAD_SUPPRESSION in rules
+    assert "TS401" in rules
+
+
+def test_allow_lists_several_rules():
+    src = (
+        "import json, time\n"
+        "def f(rec):\n"
+        "    t = time.time()  # reprolint: allow[DT304,TS401] -- test double\n"
+        "    return json.dumps(rec)  # reprolint: allow[TS401] -- test double\n"
+    )
+    passes = [DeterminismPass(), TelemetryStrictnessPass()]
+    assert lint_source(src, "x.py", passes, scoped=False) == []
+
+
+def test_allow_only_covers_its_line():
+    src = (
+        "import json\n"
+        "def f(rec):\n"
+        "    a = json.dumps(rec)  # reprolint: allow[TS401] -- test double\n"
+        "    return json.dumps(rec)\n"
+    )
+    findings = lint_source(src, "x.py", [TelemetryStrictnessPass()], scoped=False)
+    assert [f.line for f in findings] == [4]
+
+
+def test_syntax_error_reports_parse_rule():
+    findings = lint_source("def broken(:\n", "x.py", [TelemetryStrictnessPass()])
+    assert [f.rule for f in findings] == [PARSE_ERROR]
+
+
+# ---------------------------------------------------------------------------
+# scoping
+# ---------------------------------------------------------------------------
+def test_determinism_pass_scoped_to_core_and_fleet():
+    p = DeterminismPass()
+    assert p.applies("core/online.py")
+    assert p.applies("src/repro/fleet/runtime.py")
+    assert not p.applies("benchmarks/fleet.py")
+    assert not p.applies("obs/trace.py")
+
+
+def test_telemetry_pass_exempts_trace_module():
+    p = TelemetryStrictnessPass()
+    assert not p.applies("src/repro/obs/trace.py")
+    assert p.applies("src/repro/launch/dryrun.py")
+
+
+def test_rule_catalog_ids_are_unique():
+    ids = [r.id for r in all_rules()]
+    assert len(ids) == len(set(ids))
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def test_cli_clean_on_repo():
+    """The lint-clean contract: the shipped tree has zero findings."""
+    res = run_cli()
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+@pytest.mark.parametrize("relname", [FLAGGED[k][0] for k in sorted(FLAGGED)] + ["suppress_bad.py"])
+def test_cli_nonzero_on_each_flagged_fixture(relname):
+    res = run_cli("--root", FIXTURES, os.path.join(FIXTURES, relname))
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert res.stdout.strip(), "findings must print ruff-style"
+
+
+def test_cli_json_output_parses():
+    import json
+
+    res = run_cli("--root", FIXTURES, "--json", "-", os.path.join(FIXTURES, "ts_flagged.py"))
+    payload = json.loads(res.stdout[res.stdout.index("{") :])
+    assert payload["n_findings"] == len(payload["findings"]) > 0
+    assert all(f["rule"] == "TS401" for f in payload["findings"])
+
+
+def test_cli_select_restricts_rules():
+    res = run_cli(
+        "--root", FIXTURES, "--select", "DT302", os.path.join(FIXTURES, "core", "dt_flagged.py")
+    )
+    assert res.returncode == 1
+    reported = {line.split(": ")[1].split()[0] for line in res.stdout.strip().splitlines()}
+    assert reported == {"DT302"}
+
+
+# ---------------------------------------------------------------------------
+# runtime sanitizer
+# ---------------------------------------------------------------------------
+def make_net():
+    return NetworkGraph(
+        [1.0, 1.0, 1.0], [4.0, 4.0, 4.0], [(0, 1, 10.0), (1, 2, 8.0), (0, 2, 5.0)]
+    )
+
+
+def test_sanitizer_clean_churn_passes():
+    net = make_net()
+    audit_graph(net)
+    net.set_link_capacity(0, 1, 7.0)
+    assert net.fail_link(0, 2)
+    assert net.recover_link(0, 2)
+    net.fail_node(1)
+    net.recover_node(1)
+    net.restore_topology()
+    np.testing.assert_allclose(net.capacity, net.base_capacity)
+
+
+def test_sanitizer_catches_monkeypatched_mutator(monkeypatch):
+    """The headline case: a class-level monkeypatch of set_link_capacity that
+    forgets the capacity_version bump must raise at the mutation site."""
+
+    def forgetful(self, u, v, bw):
+        key = (min(u, v), max(u, v))
+        self.bandwidth[key] = float(bw)
+        self.capacity[self.link_index[key]] = bw  # no capacity_version bump
+
+    net = make_net()
+    audit_graph(net)
+    monkeypatch.setattr(NetworkGraph, "set_link_capacity", forgetful)
+    with pytest.raises(SanitizerError, match="capacity_version"):
+        net.set_link_capacity(0, 1, 3.0)
+
+
+def test_sanitizer_catches_missing_topology_bump(monkeypatch):
+    def forgetful(self, u, v):
+        self._adj[u].discard(v)
+        self._adj[v].discard(u)
+        return True
+
+    net = make_net()
+    audit_graph(net)
+    monkeypatch.setattr(NetworkGraph, "fail_link", forgetful)
+    with pytest.raises(SanitizerError, match="topology_version"):
+        net.fail_link(0, 1)
+
+
+def test_sanitizer_engine_refuses_dodged_epoch():
+    from repro.core.jrba import JRBAEngine
+
+    uninstall = install()
+    try:
+        net = random_edge_network(6)
+        eng = JRBAEngine(n_iters=20)
+        flows = [Flow(src=0, dst=1, volume=5.0)]
+        assert eng.solve(net, flows) is not None
+        # dodge the epoch: sever adjacency directly, no topology_version bump
+        net._adj[0].discard(1)
+        net._adj[1].discard(0)
+        with pytest.raises(SanitizerError, match="topology_version stayed"):
+            eng.solve(net, flows)
+    finally:
+        uninstall()
+
+
+def test_sanitizer_install_is_reversible():
+    from repro.analysis import sanitizer
+
+    uninstall = install()
+    sanitized = make_net()
+    assert getattr(sanitized, "_repro_sanitized", False)
+    uninstall()
+    if not sanitizer.enabled():  # under REPRO_SANITIZE=1 the conftest layer stays
+        plain = make_net()
+        assert not getattr(plain, "_repro_sanitized", False)

@@ -3,12 +3,14 @@
 (The full 512-device lower+compile paths run via ``launch/dryrun.py`` — see
 EXPERIMENTS.md §Dry-run; these tests cover the host-side logic.)
 """
+import json
+
 import jax.numpy as jnp
 import pytest
 
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.shapes import CELLS, SUBQUADRATIC, all_cells, applicable
-from repro.launch.dryrun import collective_bytes, input_specs
+from repro.launch.dryrun import collective_bytes, input_specs, record_line
 
 FAKE_HLO = """
 HloModule jit_train_step
@@ -93,3 +95,27 @@ class TestCellMatrix:
     def test_decode_tokens_dtype(self):
         ins = input_specs("musicgen-medium", "decode_32k")
         assert ins["tokens"].dtype == jnp.int32
+
+
+class TestRecordLine:
+    def test_nonfinite_fields_serialize_strict(self):
+        """A failed cell can carry inf/nan timings; the JSONL line must stay
+        RFC-8259 (no bare Infinity/NaN tokens) so strict parsers accept it."""
+        rec = {
+            "arch": "x",
+            "ok": False,
+            "compile_s": float("inf"),
+            "flops": float("nan"),
+            "nested": {"lower_s": float("-inf")},
+        }
+        line = record_line(rec)
+        assert line.endswith("\n")
+        assert "Infinity" not in line and "NaN" not in line
+        back = json.loads(line)
+        assert back["compile_s"] is None
+        assert back["flops"] is None
+        assert back["nested"]["lower_s"] is None
+
+    def test_finite_record_roundtrips(self):
+        rec = {"arch": "x", "ok": True, "compile_s": 1.25}
+        assert json.loads(record_line(rec)) == rec

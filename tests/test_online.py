@@ -217,6 +217,33 @@ def test_otfs_requeues_job_until_capacity_frees():
     np.testing.assert_allclose(net.mem_avail, net.mem_max)
 
 
+def test_otfa_records_bit_identical_across_runs():
+    """Regression lock for the OTFA refresh: per-flow results are re-attached
+    to records by *position* (``res.flows`` is the order-preserving
+    subsequence of the concatenated record flows), never by object identity —
+    an ``id()``-keyed lookup is reuse-hazardous and order-opaque. Two fresh
+    runs of the same instance must produce bit-identical records (the same
+    dev == 0 contract the benchmarks assert across solver variants)."""
+
+    def run():
+        net = make_net()
+        sim = OnlineScheduler(net, "OTFA", jrba_iters=120)
+        return sim.run(make_arrivals())
+
+    a, b = run(), run()
+    assert len(a.records) == len(b.records) > 0
+    for ra, rb in zip(a.records, b.records):
+        assert ra.schedule_time == rb.schedule_time
+        assert ra.finish_time == rb.finish_time
+        assert ra.span == rb.span
+        assert ra.routes == rb.routes
+        if ra.bandwidths is None:
+            assert rb.bandwidths is None
+        else:
+            assert ra.bandwidths.dtype == rb.bandwidths.dtype
+            np.testing.assert_array_equal(ra.bandwidths, rb.bandwidths)
+
+
 def test_otfs_requeue_restores_memory_snapshot():
     """While the oversized job waits, only the *running* job's memory may be
     held -- the rejected allocation must have been rolled back."""
